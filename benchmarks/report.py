@@ -1,0 +1,79 @@
+"""Render EXPERIMENTS.md tables from results/dryrun.json.
+
+Usage: PYTHONPATH=src python -m benchmarks.report [path]
+Prints markdown for S Dry-run and S Roofline.
+"""
+import json
+import sys
+
+import jax
+import numpy as np
+
+
+def _model_flops_ratio(r):
+    """MODEL_FLOPS / HLO_FLOPs for the cell (see launch/roofline.py)."""
+    from repro.configs import SHAPES, get_config
+    from repro.launch.roofline import count_params, model_flops
+    if r["arch"].startswith("ising"):
+        # minimal spin-update work: ~10 flops per spin flip decision
+        useful = 10.0 * r.get("spins", 0) / r["chips"]
+        return useful / r["flops"] if r.get("flops") else None
+    cfg = get_config(r["arch"])
+    shape = SHAPES[r["shape"]]
+    params = jax.eval_shape(
+        lambda k: __import__("repro.models", fromlist=["init_model"])
+        .init_model(cfg, k), jax.random.PRNGKey(0))
+    frac = (cfg.top_k / cfg.n_routed) if cfg.moe else 1.0
+    counts = count_params(params, active_moe_frac=frac)
+    if shape.kind == "train":
+        tokens = shape.global_batch * shape.seq_len
+        mf = model_flops(counts["active"], tokens, "train")
+    elif shape.kind == "prefill":
+        tokens = shape.global_batch * shape.seq_len
+        mf = model_flops(counts["active"], tokens, "fwd")
+    else:
+        mf = model_flops(counts["active"], shape.global_batch, "fwd")
+    return (mf / r["chips"]) / r["flops"] if r.get("flops") else None
+
+
+def main(path="results/dryrun.json"):
+    with open(path) as f:
+        cells = json.load(f)
+    cells.sort(key=lambda r: (r["arch"], r["shape"], r["mesh"]))
+
+    print("### Dry-run status (all cells)\n")
+    print("| arch | shape | mesh | status | compile_s | HLO GFLOPs/dev |"
+          " HLO GB/dev | coll MB/dev | temp GB/dev |")
+    print("|---|---|---|---|---|---|---|---|---|")
+    for r in cells:
+        if r["status"] == "skipped":
+            print(f"| {r['arch']} | {r['shape']} | {r['mesh']} | SKIP:"
+                  f" {r['skip_reason'][:48]} | | | | | |")
+            continue
+        mem = r.get("memory") or {}
+        temp = mem.get("temp_size_in_bytes", 0) / 1e9
+        print(f"| {r['arch']} | {r['shape']} | {r['mesh']} | {r['status']}"
+              f" | {r.get('compile_s','')} | {r.get('flops',0)/1e9:.1f}"
+              f" | {r.get('bytes',0)/1e9:.2f}"
+              f" | {r.get('coll_bytes',0)/1e6:.1f} | {temp:.2f} |")
+
+    print("\n### Roofline terms (per device, single-pod 16x16 unless noted)\n")
+    print("| arch | shape | mesh | t_compute s | t_memory s |"
+          " t_collective s | dominant | MODEL/HLO flops |")
+    print("|---|---|---|---|---|---|---|---|")
+    for r in cells:
+        if r["status"] != "ok":
+            continue
+        try:
+            ratio = _model_flops_ratio(r)
+            ratio_s = f"{ratio:.3f}" if ratio is not None else "-"
+        except Exception:
+            ratio_s = "-"
+        print(f"| {r['arch']} | {r['shape']} | {r['mesh']}"
+              f" | {r['t_compute_s']:.4f} | {r['t_memory_s']:.4f}"
+              f" | {r['t_collective_s']:.4f} | **{r['dominant']}**"
+              f" | {ratio_s} |")
+
+
+if __name__ == "__main__":
+    main(*sys.argv[1:])

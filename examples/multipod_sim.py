@@ -1,0 +1,39 @@
+"""Distributed Ising on every local device: the paper's multi-GPU slab
+decomposition as shard_map + ppermute halos, with bit-exactness vs the
+single-device engine demonstrated.
+
+Run:  PYTHONPATH=src XLA_FLAGS=--xla_force_host_platform_device_count=8 \
+          python examples/multipod_sim.py
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import distributed as dist, lattice as lat, \
+    metropolis as metro, rng as crng
+
+N = 64
+nd = len(jax.devices())
+shape, axes = ((2, nd // 4, 2), ("pod", "data", "model")) if nd >= 8 \
+    else ((nd, 1), ("data", "model"))
+mesh = jax.make_mesh(shape, axes,
+                     axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+print(f"devices={nd} mesh={dict(mesh.shape)}")
+
+full = lat.init_lattice(jax.random.PRNGKey(7), N, N)
+b, w = lat.split_checkerboard(full)
+beta = jnp.float32(1 / 2.0)
+
+step, sh = dist.make_ising_step(mesh, n=N, m=N, seed=5, n_sweeps=50)
+b1, w1 = step(jax.device_put(b, sh), jax.device_put(w, sh), beta,
+              jnp.uint32(0))
+mag = dist.magnetization_dist(mesh)
+print(f"distributed m after 50 sweeps: {float(mag(b1, w1)):+.4f}")
+
+# single-device reference, same Philox stream -> identical trajectory
+from repro.core.metropolis import run_sweeps_philox
+br, wr = run_sweeps_philox(b, w, beta, 50, seed=5)
+same = (np.asarray(b1) == np.asarray(br)).all() \
+    and (np.asarray(w1) == np.asarray(wr)).all()
+print(f"bit-exact vs single device: {bool(same)}")
+assert same

@@ -1,0 +1,10 @@
+"""Batched serving example: KV-cached greedy decode with slot recycling.
+
+Run:  PYTHONPATH=src python examples/serve_lm.py
+"""
+import sys
+
+from repro.launch.serve import main
+
+sys.exit(main(["--arch", "internlm2-1.8b", "--smoke", "--requests", "6",
+               "--batch", "3", "--max-new", "8", "--max-len", "48"]))

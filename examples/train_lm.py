@@ -1,0 +1,15 @@
+"""End-to-end LM training example: train a reduced config for a few
+hundred steps with checkpoint/restart fault tolerance.
+
+Run:  PYTHONPATH=src python examples/train_lm.py
+(~100M-param configurations train identically via
+ python -m repro.launch.train --arch internlm2-1.8b --smoke --steps 300)
+"""
+import sys
+
+from repro.launch.train import main
+
+sys.exit(main(["--arch", "internlm2-1.8b", "--smoke", "--steps", "60",
+               "--batch", "8", "--seq", "64", "--lr", "3e-3",
+               "--ckpt-dir", "/tmp/repro_train_ck", "--ckpt-every", "25",
+               "--log-every", "10"]))

@@ -1,0 +1,2 @@
+"""repro: multi-pod JAX framework around the 2D Ising GPU performance study."""
+__version__ = "1.0.0"

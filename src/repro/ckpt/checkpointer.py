@@ -1,0 +1,122 @@
+"""Fault-tolerant checkpointing: atomic, async, elastic-reshardable.
+
+Layout: ``<dir>/step_<N>/arrays.npz`` + ``DONE`` marker (the marker commits
+the checkpoint -- a killed writer never leaves a readable-but-partial
+step).  ``save_async`` snapshots to host then writes on a worker thread so
+the training loop is not blocked (overlap of I/O with compute).  Restore
+returns host numpy trees; the caller ``device_put``s with the *current*
+mesh's shardings, which is what makes restarts elastic: a checkpoint
+written on 256 chips restores onto 512 or 64 unchanged.
+"""
+from __future__ import annotations
+
+import os
+import queue
+import shutil
+import threading
+from typing import Any, Optional, Tuple
+
+import jax
+import numpy as np
+
+
+def _flatten(tree) -> dict:
+    flat = jax.tree_util.tree_flatten_with_path(tree)[0]
+    out = {}
+    for path, leaf in flat:
+        key = "/".join(str(getattr(k, "key", getattr(k, "idx", k)))
+                       for k in path)
+        out[key] = np.asarray(leaf)
+    return out
+
+
+def _unflatten_into(tree, arrays: dict):
+    flat, treedef = jax.tree_util.tree_flatten_with_path(tree)
+    leaves = []
+    for path, leaf in flat:
+        key = "/".join(str(getattr(k, "key", getattr(k, "idx", k)))
+                       for k in path)
+        a = arrays[key]
+        assert a.shape == tuple(leaf.shape), (key, a.shape, leaf.shape)
+        leaves.append(a)
+    return jax.tree_util.tree_unflatten(treedef, leaves)
+
+
+class Checkpointer:
+    def __init__(self, directory: str, keep: int = 3):
+        self.dir = directory
+        self.keep = keep
+        os.makedirs(directory, exist_ok=True)
+        self._q: "queue.Queue" = queue.Queue()
+        self._worker: Optional[threading.Thread] = None
+
+    # -- write --------------------------------------------------------------
+    def save(self, step: int, tree) -> str:
+        host = _flatten(tree)
+        return self._write(step, host)
+
+    def save_async(self, step: int, tree) -> None:
+        """Snapshot to host now; write on a background thread."""
+        host = _flatten(tree)  # device->host copy happens here
+        self._join()
+        self._worker = threading.Thread(target=self._write,
+                                        args=(step, host), daemon=True)
+        self._worker.start()
+
+    def wait(self) -> None:
+        self._join()
+
+    def _join(self):
+        if self._worker is not None:
+            self._worker.join()
+            self._worker = None
+
+    def _write(self, step: int, host: dict) -> str:
+        path = os.path.join(self.dir, f"step_{step:010d}")
+        tmp = path + ".tmp"
+        if os.path.exists(tmp):
+            shutil.rmtree(tmp)
+        os.makedirs(tmp)
+        np.savez(os.path.join(tmp, "arrays.npz"), **host)
+        with open(os.path.join(tmp, "DONE"), "w") as f:
+            f.write(str(step))
+        if os.path.exists(path):
+            shutil.rmtree(path)
+        os.replace(tmp, path)
+        self._gc()
+        return path
+
+    def _gc(self):
+        steps = self.all_steps()
+        for s in steps[:-self.keep] if self.keep else []:
+            shutil.rmtree(os.path.join(self.dir, f"step_{s:010d}"),
+                          ignore_errors=True)
+
+    # -- read ---------------------------------------------------------------
+    def all_steps(self):
+        out = []
+        for d in sorted(os.listdir(self.dir)):
+            if d.startswith("step_") and os.path.exists(
+                    os.path.join(self.dir, d, "DONE")):
+                out.append(int(d.split("_")[1]))
+        return out
+
+    def latest_step(self) -> Optional[int]:
+        steps = self.all_steps()
+        return steps[-1] if steps else None
+
+    def restore(self, template, step: Optional[int] = None,
+                shardings=None) -> Tuple[int, Any]:
+        """Restore into the structure of ``template``; if ``shardings`` is
+        given, device_put each leaf with it (elastic reshard)."""
+        if step is None:
+            step = self.latest_step()
+        assert step is not None, "no checkpoint found"
+        path = os.path.join(self.dir, f"step_{step:010d}", "arrays.npz")
+        with np.load(path, allow_pickle=False) as z:
+            arrays = {k: z[k] for k in z.files}
+        tree = _unflatten_into(template, arrays)
+        if shardings is not None:
+            tree = jax.tree.map(
+                lambda a, s: jax.device_put(a, s), tree, shardings)
+        return step, tree

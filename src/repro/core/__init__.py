@@ -1,0 +1,3 @@
+"""Ising engines: the paper's contribution as composable JAX modules."""
+from . import distributed, lattice, metropolis, multispin, observables, rng, tensorcore  # noqa: F401
+from .sim import Simulation, SimConfig  # noqa: F401

@@ -1,0 +1,295 @@
+"""Distributed Ising engine: shard_map pencil decomposition + ICI halos.
+
+The paper (S4) distributes the lattice as horizontal slabs, one per GPU, and
+lets unified memory fetch the two boundary rows over NVLink.  TPUs have no
+unified memory; the TPU-native equivalent is an explicit halo exchange with
+``lax.ppermute`` over the ICI torus -- constant bytes/device, so unlike the
+paper's single-NVSwitch ceiling (16 GPUs) this scales to arbitrary pods.
+
+Layout: the two compact color planes ``(N, M/2)`` are sharded as a 2-D
+pencil grid -- rows over the (pod, data) ring, columns over the model ring.
+Each half-sweep exchanges one row-halo in each vertical direction and one
+column-halo in each horizontal direction (the column halo carries the
+single boundary spin of the paper's Fig. 3 side-word logic).
+
+Randomness is global-position-keyed Philox, so results are *independent of
+the device grid* -- resharding to a different mesh reproduces the same
+physics trajectory bit-for-bit (tested in tests/test_distributed.py).
+
+Halo/bulk overlap (beyond-paper, DESIGN.md S6.4): the update is split into
+an interior region that depends only on local data and 1-wide border strips
+that consume the halos, so XLA's latency-hiding scheduler can run the
+ppermutes concurrently with the interior update.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Sequence
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from . import metropolis as metro
+from . import rng as crng
+
+
+# ---------------------------------------------------------------------------
+# multi-level ring shift over a product of mesh axes
+# ---------------------------------------------------------------------------
+
+def ring_shift(x: jax.Array, axis_names: Sequence[str], shift: int):
+    """Shift x by one position around the ring formed by the product of
+    ``axis_names`` (most-significant first).  shift=+1 receives from the
+    previous ring position (use for a *top* halo), -1 from the next.
+
+    Implemented as a cascade: permute the least-significant axis, then fix
+    up the wrap positions with permutes over progressively more significant
+    axes (DESIGN.md S5: this is how a (pod, data) slab ring is built from
+    per-axis ppermutes; ppermute itself is single-axis).
+    """
+    assert shift in (+1, -1)
+    names = list(axis_names)
+
+    def perm(axis, val):
+        n = jax.lax.axis_size(axis)
+        pairs = [((i - shift) % n, i) for i in range(n)]
+        return jax.lax.ppermute(val, axis, pairs)
+
+    out = perm(names[-1], x)
+    # positions that wrapped on the k-th axis also need the (k-1)-th hop
+    for k in range(len(names) - 1, 0, -1):
+        idx = jax.lax.axis_index(names[k])
+        n = jax.lax.axis_size(names[k])
+        at_wrap = (idx == 0) if shift == +1 else (idx == n - 1)
+        cross = perm(names[k - 1], out)
+        out = jnp.where(at_wrap, cross, out)
+    return out
+
+
+def _exchange_halos(op, row_axes, col_axes):
+    """Return (top, bottom, left, right) halos of the opposite-color plane."""
+    top = ring_shift(op[-1:, :], row_axes, +1)      # last row of upper nbr
+    bottom = ring_shift(op[:1, :], row_axes, -1)    # first row of lower nbr
+    left = ring_shift(op[:, -1:], col_axes, +1)
+    right = ring_shift(op[:, :1], col_axes, -1)
+    return top, bottom, left, right
+
+
+# ---------------------------------------------------------------------------
+# halo-aware neighbor sums (basic int8 engine)
+# ---------------------------------------------------------------------------
+
+def _nn_with_halos(op, halos, is_black, row0_parity):
+    """4-neighbor sums for the local shard given exchanged halos.
+
+    ``row0_parity`` is the global parity of the shard's first row (0 if the
+    per-shard row count is even, which mesh construction guarantees).
+    """
+    top, bottom, left, right = halos
+    nl, wl = op.shape
+    row_i = jax.lax.broadcasted_iota(jnp.int32, op.shape, 0)
+    col_i = jax.lax.broadcasted_iota(jnp.int32, op.shape, 1)
+    dt = op.dtype  # int8: 4-neighbor sums fit; avoids 4x-wide
+    # intermediates if XLA materializes anything (H1.5, EXPERIMENTS.md)
+
+    def shift(x, dr, dc):
+        """out[i,j] = x[i+dr, j+dc] (pad+slice: fuses, unlike concat --
+        see EXPERIMENTS.md S Perf H1.4)."""
+        pad_cfg = [(max(-dr, 0), max(dr, 0), 0),
+                   (max(-dc, 0), max(dc, 0), 0)]
+        padded = jax.lax.pad(x, jnp.zeros((), dt), pad_cfg)
+        return jax.lax.slice(padded, (max(dr, 0), max(dc, 0)),
+                             (max(dr, 0) + nl, max(dc, 0) + wl))
+
+    up = jnp.where(row_i == 0, top, shift(op, -1, 0))
+    down = jnp.where(row_i == nl - 1, bottom, shift(op, 1, 0))
+    plus = jnp.where(col_i == wl - 1, right, shift(op, 0, 1))   # (i, k+1)
+    minus = jnp.where(col_i == 0, left, shift(op, 0, -1))       # (i, k-1)
+    rows = (jnp.arange(op.shape[0]) + row0_parity) % 2
+    rows = rows[:, None]
+    if is_black:
+        side = jnp.where(rows == 1, plus, minus)
+    else:
+        side = jnp.where(rows == 1, minus, plus)
+    return up + down + op + side  # int8 arithmetic: |sum| <= 4
+
+
+def _global_positions(shape, row_axes, col_axes):
+    """Global (row, col) index arrays of the local shard's cells."""
+    n_loc, m_loc = shape
+
+    def multi_index(axes):
+        idx = jnp.int32(0)
+        for a in axes:
+            idx = idx * jax.lax.axis_size(a) + jax.lax.axis_index(a)
+        return idx
+
+    r0 = multi_index(row_axes) * n_loc
+    c0 = multi_index(col_axes) * m_loc
+    rows = r0 + jnp.arange(n_loc, dtype=jnp.int32)[:, None]
+    cols = c0 + jnp.arange(m_loc, dtype=jnp.int32)[None, :]
+    return rows, cols
+
+
+def update_color_dist(target, op, inv_temp, is_black, seed, offset,
+                      global_cols: int, row_axes, col_axes):
+    """One distributed half-sweep of the basic engine on the local shard."""
+    halos = _exchange_halos(op, row_axes, col_axes)
+    rows, cols = _global_positions(target.shape, row_axes, col_axes)
+    nn = _nn_with_halos(op, halos, is_black, row0_parity=0)
+    gidx = (rows * global_cols + cols).astype(jnp.uint32)
+    u = crng.uniforms(seed, gidx, jnp.uint32(offset))[0]
+    t = target.astype(jnp.int32)
+    acc = jnp.exp(-2.0 * inv_temp * nn.astype(jnp.float32)
+                  * t.astype(jnp.float32))
+    return jnp.where(u < acc, -t, t).astype(target.dtype)
+
+
+def sweep_dist(black, white, inv_temp, seed, sweep_index, global_cols,
+               row_axes, col_axes):
+    off = 2 * jnp.uint32(sweep_index)
+    black = update_color_dist(black, white, inv_temp, True, seed, off,
+                              global_cols, row_axes, col_axes)
+    white = update_color_dist(white, black, inv_temp, False, seed, off + 1,
+                              global_cols, row_axes, col_axes)
+    return black, white
+
+
+# ---------------------------------------------------------------------------
+# public factory
+# ---------------------------------------------------------------------------
+
+def make_ising_step(mesh, *, n: int, m: int, seed: int = 0,
+                    n_sweeps: int = 1, row_axes=None, col_axes=None):
+    """Build a jitted multi-device Ising sweep function for ``mesh``.
+
+    Rows of the compact planes are sharded over ``row_axes`` (default: all
+    mesh axes but the last), columns over ``col_axes`` (default: the last
+    mesh axis).  Returns (step_fn, plane_sharding).
+    """
+    names = list(mesh.axis_names)
+    row_axes = tuple(row_axes if row_axes is not None else names[:-1])
+    col_axes = tuple(col_axes if col_axes is not None else names[-1:])
+    half = m // 2
+    rows_devs = 1
+    for a in row_axes:
+        rows_devs *= mesh.shape[a]
+    cols_devs = 1
+    for a in col_axes:
+        cols_devs *= mesh.shape[a]
+    assert n % rows_devs == 0 and (n // rows_devs) % 2 == 0, (
+        "per-shard row count must be even so checkerboard parity is uniform")
+    assert half % cols_devs == 0
+
+    spec = P(row_axes, col_axes)
+    sharding = jax.sharding.NamedSharding(mesh, spec)
+
+    @functools.partial(
+        jax.shard_map, mesh=mesh,
+        in_specs=(spec, spec, P(), P()),
+        out_specs=(spec, spec),
+        check_vma=False)
+    def _sweeps(black, white, inv_temp, sweep0):
+        def body(i, carry):
+            b, w = carry
+            return sweep_dist(b, w, inv_temp, seed, sweep0 + i, half,
+                              row_axes, col_axes)
+        return jax.lax.fori_loop(0, n_sweeps, body, (black, white))
+
+    return jax.jit(_sweeps), sharding
+
+
+def make_packed_ising_step(mesh, *, n: int, m: int, seed: int = 0,
+                           n_sweeps: int = 1, row_axes=None, col_axes=None):
+    """Multispin (packed uint32 nibble) distributed sweep -- the paper's
+    optimized engine on the full mesh.  Halos: one word-row per vertical
+    direction, one word-column per horizontal direction (the column halo
+    carries the paper's Fig. 3 boundary nibble).  Returns
+    (jitted step(black, white, inv_temp, sweep0), word-plane sharding)."""
+    from . import lattice as lat
+    from . import multispin as ms
+
+    names = list(mesh.axis_names)
+    row_axes = tuple(row_axes if row_axes is not None else names[:-1])
+    col_axes = tuple(col_axes if col_axes is not None else names[-1:])
+    words = m // 2 // lat.SPINS_PER_WORD
+    spec = P(row_axes, col_axes)
+    nib = lat.NIBBLE_BITS
+
+    def update_packed(target, op, inv_temp, is_black, offset):
+        # H1.4 (EXPERIMENTS.md S Perf): express every shifted read as
+        # pad+slice (a fusible producer) and splice the halo row/column in
+        # with an iota-mask select over a virtual broadcast.  No extended
+        # buffer, no concatenates: the whole color update is one fusion
+        # whose HBM traffic is read(op) + read(target) + write(target).
+        top, bottom, left, right = _exchange_halos(op, row_axes, col_axes)
+        nl, wl = op.shape
+        zero = jnp.uint32(0)
+        row_i = jax.lax.broadcasted_iota(jnp.int32, op.shape, 0)
+        col_i = jax.lax.broadcasted_iota(jnp.int32, op.shape, 1)
+
+        def shift(x, dr, dc):
+            """out[i,j] = x[i+dr, j+dc], zero-filled out of range."""
+            pad_cfg = [(max(-dr, 0), max(dr, 0), 0),
+                       (max(-dc, 0), max(dc, 0), 0)]
+            padded = jax.lax.pad(x, zero, pad_cfg)
+            return jax.lax.slice(
+                padded, (max(dr, 0), max(dc, 0)),
+                (max(dr, 0) + nl, max(dc, 0) + wl))
+
+        up = jnp.where(row_i == 0, top, shift(op, -1, 0))
+        down = jnp.where(row_i == nl - 1, bottom, shift(op, 1, 0))
+        nxt = jnp.where(col_i == wl - 1, right, shift(op, 0, 1))
+        prv = jnp.where(col_i == 0, left, shift(op, 0, -1))
+        plus = (op >> jnp.uint32(nib)) | (nxt << jnp.uint32(32 - nib))
+        minus = (op << jnp.uint32(nib)) | (prv >> jnp.uint32(32 - nib))
+        rows = (jax.lax.broadcasted_iota(jnp.uint32, op.shape, 0)
+                % jnp.uint32(2))
+        side = jnp.where(rows == 1, plus, minus) if is_black \
+            else jnp.where(rows == 1, minus, plus)
+        nn_words = up + down + op + side
+        rpos, cpos = _global_positions(target.shape, row_axes, col_axes)
+        widx = (rpos * words + cpos).astype(jnp.uint32)
+        draws = ms.word_randoms(seed, widx, offset)
+        flip = jnp.zeros_like(target)
+        for k in range(lat.SPINS_PER_WORD):
+            sh = jnp.uint32(k * nib)
+            s = (target >> sh) & jnp.uint32(1)
+            nnk = (nn_words >> sh) & jnp.uint32(0xF)
+            pacc = ms.acceptance_prob(inv_temp, s, nnk)
+            u = crng.u32_to_uniform(draws[k])
+            flip = flip | ((u < pacc).astype(jnp.uint32) << sh)
+        return target ^ flip
+
+    @functools.partial(jax.shard_map, mesh=mesh,
+                       in_specs=(spec, spec, P(), P()),
+                       out_specs=(spec, spec), check_vma=False)
+    def sweeps(black, white, inv_temp, sweep0):
+        def body(i, carry):
+            b, w = carry
+            off = sweep0 + 2 * jnp.uint32(i)
+            b = update_packed(b, w, inv_temp, True, off)
+            w = update_packed(w, b, inv_temp, False, off + 1)
+            return b, w
+        return jax.lax.fori_loop(0, n_sweeps, body, (black, white))
+
+    return jax.jit(sweeps), jax.sharding.NamedSharding(mesh, spec)
+
+
+def magnetization_dist(mesh, row_axes=None, col_axes=None):
+    """shard_map'd magnetization (psum over the whole mesh)."""
+    names = list(mesh.axis_names)
+    row_axes = tuple(row_axes if row_axes is not None else names[:-1])
+    col_axes = tuple(col_axes if col_axes is not None else names[-1:])
+    spec = P(row_axes, col_axes)
+
+    @functools.partial(jax.shard_map, mesh=mesh, in_specs=(spec, spec),
+                       out_specs=P(), check_vma=False)
+    def _mag(black, white):
+        s = black.astype(jnp.float32).sum() + white.astype(jnp.float32).sum()
+        s = jax.lax.psum(s, row_axes + col_axes)
+        count = 2.0 * black.size * jax.lax.psum(1, row_axes + col_axes)
+        return s / count
+
+    return jax.jit(_mag)

@@ -1,0 +1,134 @@
+"""Checkerboard lattice (de)composition and multi-spin packing.
+
+Follows the paper's data layout (Fig. 1 / Fig. 3):
+
+* the abstract ``(N, M)`` lattice of spins sigma = +-1 is split into two
+  color planes of shape ``(N, M/2)`` -- *black* cells are those with
+  ``(i + j) % 2 == 0`` -- with each color compacted along rows;
+* for the multi-spin engine, a color plane is packed 4 bits/spin into
+  uint32 words (8 spins/word; the TPU VPU datapath is 32-bit, so uint32
+  replaces the paper's 64-bit words), with the 0/1 encoding
+  ``s = (sigma + 1) / 2`` that makes nibble-parallel neighbor sums exact.
+
+Neighbor indexing in the compact planes (paper Fig. 2 / Fig. 3): for a
+*black* target at ``(i, k)`` the four neighbors are the opposite plane's
+``(i-1, k)``, ``(i, k)``, ``(i+1, k)`` and ``(i, k+1)`` on odd rows /
+``(i, k-1)`` on even rows; the side offset parity flips for white targets.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+SPINS_PER_WORD = 8  # 4 bits/spin in uint32
+NIBBLE_BITS = 4
+
+
+def init_lattice(key, n: int, m: int, p_up: float = 0.5,
+                 dtype=jnp.int8) -> jax.Array:
+    """Random +-1 lattice of shape (n, m)."""
+    u = jax.random.uniform(key, (n, m))
+    return jnp.where(u < p_up, 1, -1).astype(dtype)
+
+
+def split_checkerboard(lattice: jax.Array):
+    """(N, M) full lattice -> (black, white) compact planes of (N, M/2).
+
+    black[i, k] = lattice[i, 2k + i%2]; white[i, k] = lattice[i, 2k + (i+1)%2].
+    """
+    n, m = lattice.shape
+    assert m % 2 == 0, "lattice width must be even"
+    pairs = lattice.reshape(n, m // 2, 2)
+    rows = jnp.arange(n) % 2
+    black = jnp.take_along_axis(
+        pairs, rows[:, None, None].astype(jnp.int32), axis=2)[..., 0]
+    white = jnp.take_along_axis(
+        pairs, (1 - rows)[:, None, None].astype(jnp.int32), axis=2)[..., 0]
+    return black, white
+
+
+def merge_checkerboard(black: jax.Array, white: jax.Array) -> jax.Array:
+    """Inverse of :func:`split_checkerboard`."""
+    n, half = black.shape
+    rows = (jnp.arange(n) % 2)[:, None]
+    even_pairs = jnp.stack([black, white], axis=-1)  # even rows: black first
+    odd_pairs = jnp.stack([white, black], axis=-1)
+    pairs = jnp.where(rows[..., None] == 0, even_pairs, odd_pairs)
+    return pairs.reshape(n, 2 * half)
+
+
+def side_shift(op_plane: jax.Array, is_black: bool) -> jax.Array:
+    """The 4th (same-row) neighbor of every target cell, in target coords.
+
+    For black targets: odd rows take (i, k+1), even rows (i, k-1); reversed
+    for white targets. Periodic wrap via roll.
+    """
+    rows = (jnp.arange(op_plane.shape[0]) % 2)[:, None]
+    plus = jnp.roll(op_plane, -1, axis=1)   # (i, k+1)
+    minus = jnp.roll(op_plane, 1, axis=1)   # (i, k-1)
+    if is_black:
+        return jnp.where(rows == 1, plus, minus)
+    return jnp.where(rows == 1, minus, plus)
+
+
+# ---------------------------------------------------------------------------
+# multi-spin packing: 0/1 spins, 4 bits each, 8 per uint32 word
+# ---------------------------------------------------------------------------
+
+def to_binary(plane_pm1: jax.Array) -> jax.Array:
+    """+-1 int plane -> 0/1 uint32 plane."""
+    return ((plane_pm1.astype(jnp.int32) + 1) // 2).astype(jnp.uint32)
+
+
+def from_binary(plane01: jax.Array, dtype=jnp.int8) -> jax.Array:
+    return (2 * plane01.astype(jnp.int32) - 1).astype(dtype)
+
+
+def pack_nibbles(plane01: jax.Array) -> jax.Array:
+    """(N, C) 0/1 plane -> (N, C/8) uint32, nibble n = column 8w + n."""
+    n, c = plane01.shape
+    assert c % SPINS_PER_WORD == 0, "columns must be a multiple of 8"
+    grouped = plane01.astype(jnp.uint32).reshape(n, c // SPINS_PER_WORD,
+                                                 SPINS_PER_WORD)
+    shifts = (jnp.arange(SPINS_PER_WORD, dtype=jnp.uint32) * NIBBLE_BITS)
+    return jnp.sum(grouped << shifts, axis=-1, dtype=jnp.uint32)
+
+
+def unpack_nibbles(words: jax.Array) -> jax.Array:
+    """(N, W) uint32 -> (N, 8W) nibble values (uint32)."""
+    n, w = words.shape
+    shifts = (jnp.arange(SPINS_PER_WORD, dtype=jnp.uint32) * NIBBLE_BITS)
+    nib = (words[..., None] >> shifts) & jnp.uint32(0xF)
+    return nib.reshape(n, w * SPINS_PER_WORD)
+
+
+def align_side_word(center: jax.Array, is_black: bool) -> jax.Array:
+    """Packed-word analogue of :func:`side_shift` (paper Fig. 3).
+
+    For each target word, 7 of the 8 same-row neighbors live in the
+    opposite plane's word at the same coordinates; the 8th is the edge
+    nibble of the word to the left/right.  We build the fully aligned
+    side word with two shifts and a splice, row-parity dependent.
+    """
+    rows = (jnp.arange(center.shape[0], dtype=jnp.uint32) % 2)[:, None]
+    nxt = jnp.roll(center, -1, axis=1)
+    prv = jnp.roll(center, 1, axis=1)
+    # shift toward k+1: nibble n <- column c+1 == nibble n+1 (next word's
+    # nibble 0 enters at the top)
+    plus = (center >> NIBBLE_BITS) | (nxt << (32 - NIBBLE_BITS))
+    # shift toward k-1
+    minus = (center << NIBBLE_BITS) | (prv >> (32 - NIBBLE_BITS))
+    if is_black:
+        return jnp.where(rows == 1, plus, minus)
+    return jnp.where(rows == 1, minus, plus)
+
+
+def packed_neighbor_sums(op_words: jax.Array, is_black: bool) -> jax.Array:
+    """Nibble-parallel 4-neighbor sums: THREE adds per 8 spins (paper S3.3).
+
+    Each nibble sum is at most 4 < 16, so no carries cross nibbles.
+    """
+    up = jnp.roll(op_words, 1, axis=0)
+    down = jnp.roll(op_words, -1, axis=0)
+    side = align_side_word(op_words, is_black)
+    return up + down + op_words + side

@@ -1,0 +1,95 @@
+"""Basic checkerboard Metropolis engine (paper S3.1), pure JAX.
+
+This is the stencil formulation: two compact color planes, 4-neighbor sums
+via rolls, Metropolis accept with ``exp(-2 beta nn sigma)``.  Two variants:
+
+* ``update_color``          -- pre-generated uniforms (the paper's basic path,
+                               which pre-populates a random array per color);
+* ``update_color_philox``   -- in-kernel-style counter-based Philox draws
+                               (beyond-paper for the basic engine: removes the
+                               uniform-array HBM traffic; see DESIGN.md S6).
+
+Spins are stored as int8 +-1 in the compact planes.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from . import lattice as lat
+from . import rng as crng
+
+
+def neighbor_sums(op_plane: jax.Array, is_black: bool) -> jax.Array:
+    """4-neighbor spin sums for every target cell (int32)."""
+    op = op_plane.astype(jnp.int32)
+    up = jnp.roll(op, 1, axis=0)
+    down = jnp.roll(op, -1, axis=0)
+    side = lat.side_shift(op, is_black).astype(jnp.int32)
+    return up + down + op + side
+
+
+def update_color(target, op_plane, uniforms, inv_temp, is_black: bool,
+                 rule: str = "metropolis"):
+    """One half-sweep with pre-generated uniforms.
+
+    rule: 'metropolis' (accept with exp(-beta dE)) or 'heatbath'
+    (flip with p = e^{-beta dE} / (1 + e^{-beta dE}), paper S2) -- both
+    satisfy detailed balance on the checkerboard decomposition.
+    """
+    nn = neighbor_sums(op_plane, is_black)
+    t = target.astype(jnp.int32)
+    arg = -2.0 * inv_temp * nn.astype(jnp.float32) * t.astype(jnp.float32)
+    if rule == "heatbath":
+        acceptance = jax.nn.sigmoid(arg)   # e^arg / (1 + e^arg)
+    else:
+        acceptance = jnp.exp(arg)
+    flip = uniforms < acceptance
+    return jnp.where(flip, -t, t).astype(target.dtype)
+
+
+def update_color_philox(target, op_plane, inv_temp, is_black: bool,
+                        seed: int, step_offset):
+    """One half-sweep drawing uniforms from counter-based Philox in-place."""
+    n, half = target.shape
+    idx = jnp.arange(n * half, dtype=jnp.uint32).reshape(n, half)
+    u = crng.uniforms(seed, idx, jnp.uint32(step_offset))[0]
+    return update_color(target, op_plane, u, inv_temp, is_black)
+
+
+@functools.partial(jax.jit, static_argnames=("n_sweeps", "seed"))
+def run_sweeps(black, white, inv_temp, key, n_sweeps: int, seed: int = 0):
+    """n_sweeps full lattice sweeps (black then white) with jax.random."""
+    def body(i, carry):
+        b, w, k = carry
+        k, kb, kw = jax.random.split(k, 3)
+        ub = jax.random.uniform(kb, b.shape)
+        b = update_color(b, w, ub, inv_temp, is_black=True)
+        uw = jax.random.uniform(kw, w.shape)
+        w = update_color(w, b, uw, inv_temp, is_black=False)
+        return (b, w, k)
+
+    return jax.lax.fori_loop(0, n_sweeps, body, (black, white, key))
+
+
+@functools.partial(jax.jit, static_argnames=("n_sweeps", "seed"))
+def run_sweeps_philox(black, white, inv_temp, n_sweeps: int, seed: int = 0,
+                      start_offset=0):
+    """n_sweeps full sweeps with deterministic skip-ahead Philox.
+
+    ``start_offset`` is the cumulative half-sweep count already consumed --
+    exactly cuRAND's offset mechanism -- so a checkpoint/restart continues
+    the *same* random sequence (tested bit-exact in tests/).
+    """
+    start_offset = jnp.uint32(start_offset)
+
+    def body(i, carry):
+        b, w = carry
+        off = start_offset + 2 * jnp.uint32(i)
+        b = update_color_philox(b, w, inv_temp, True, seed, off)
+        w = update_color_philox(w, b, inv_temp, False, seed, off + 1)
+        return (b, w)
+
+    return jax.lax.fori_loop(0, n_sweeps, body, (black, white))

@@ -1,0 +1,103 @@
+"""Optimized multi-spin engine (paper S3.3), TPU-adapted, pure JAX reference.
+
+Spins are 0/1 nibbles packed 8-per-uint32 (the TPU VPU analogue of the
+paper's 16-per-uint64 -- see DESIGN.md S2).  Per target word the neighbor
+sums cost THREE packed adds (vs 24 unpacked for 8 spins).  The Metropolis
+accept uses a 10-entry threshold LUT instead of a per-spin ``exp`` --
+acceptance probabilities only take values ``exp(-2 beta (2s-1)(2 nn - 4))``
+for ``s in {0,1}, nn in {0..4}`` (beyond-paper: the paper evaluates exp on
+the hot path).
+
+Randomness is in-place counter-based Philox (cuRAND semantics): two
+philox4x32 calls yield the 8 uint32 draws a word needs; the counter encodes
+(half-sweep offset, word index) so the stream is launch-order independent
+and checkpoint-restart continues it exactly.
+
+The Pallas kernel in ``repro/kernels/multispin`` executes this same
+algorithm on VMEM tiles; this module is its oracle (`ref.py` delegates here).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from . import lattice as lat
+from . import rng as crng
+
+_NIB = lat.NIBBLE_BITS
+
+
+def acceptance_table(inv_temp) -> jax.Array:
+    """p[s * 5 + nn] = exp(-2 beta (2s-1)(2 nn - 4)), 10 entries."""
+    s = jnp.arange(2, dtype=jnp.float32)[:, None]      # 0/1
+    nn = jnp.arange(5, dtype=jnp.float32)[None, :]     # 0..4
+    p = jnp.exp(-2.0 * inv_temp * (2.0 * s - 1.0) * (2.0 * nn - 4.0))
+    return p.reshape(10)
+
+
+def acceptance_prob(inv_temp, s_u32, nn_u32):
+    """Closed-form acceptance: identical floats to acceptance_table[idx]
+    (same expression, same op order) but pure-elementwise, so XLA fuses
+    it into the surrounding bitwise chain instead of materializing a
+    gather -- the S Perf H1.1 change (EXPERIMENTS.md)."""
+    s = s_u32.astype(jnp.float32)
+    nn = nn_u32.astype(jnp.float32)
+    return jnp.exp(-2.0 * inv_temp * (2.0 * s - 1.0) * (2.0 * nn - 4.0))
+
+
+def word_randoms(seed: int, word_index, offset):
+    """8 uint32 draws per word: two Philox4x32 calls (cuRAND-style)."""
+    k0 = jnp.uint32(seed & 0xFFFFFFFF)
+    k1 = jnp.uint32((seed >> 32) & 0xFFFFFFFF)
+    z = jnp.zeros_like(word_index)
+    lo = crng.philox4x32(jnp.uint32(2 * offset), z, word_index, z, k0, k1)
+    hi = crng.philox4x32(jnp.uint32(2 * offset + 1), z, word_index, z, k0, k1)
+    return lo + hi  # tuple of 8 uint32 arrays
+
+
+def update_color_packed(target_words, op_words, inv_temp, is_black: bool,
+                        seed: int, offset):
+    """One packed half-sweep. target/op are (N, W) uint32 nibble words."""
+    nn_words = lat.packed_neighbor_sums(op_words, is_black)
+    n, w = target_words.shape
+    widx = jnp.arange(n * w, dtype=jnp.uint32).reshape(n, w)
+    draws = word_randoms(seed, widx, offset)
+
+    flip_word = jnp.zeros_like(target_words)
+    for nib in range(lat.SPINS_PER_WORD):
+        s = (target_words >> jnp.uint32(nib * _NIB)) & jnp.uint32(1)
+        nn = (nn_words >> jnp.uint32(nib * _NIB)) & jnp.uint32(0xF)
+        p = acceptance_prob(inv_temp, s, nn)
+        u = crng.u32_to_uniform(draws[nib])
+        flip = (u < p).astype(jnp.uint32)
+        flip_word = flip_word | (flip << jnp.uint32(nib * _NIB))
+    return target_words ^ flip_word
+
+
+@functools.partial(jax.jit, static_argnames=("n_sweeps", "seed"))
+def run_sweeps_packed(black_words, white_words, inv_temp, n_sweeps: int,
+                      seed: int = 0, start_offset=0):
+    start_offset = jnp.uint32(start_offset)
+
+    def body(i, carry):
+        b, w = carry
+        off = start_offset + 2 * jnp.uint32(i)
+        b = update_color_packed(b, w, inv_temp, True, seed, off)
+        w = update_color_packed(w, b, inv_temp, False, seed, off + 1)
+        return (b, w)
+
+    return jax.lax.fori_loop(0, n_sweeps, body,
+                             (black_words, white_words))
+
+
+def pack_lattice(black_pm1, white_pm1):
+    """+-1 compact planes -> packed uint32 word planes."""
+    return (lat.pack_nibbles(lat.to_binary(black_pm1)),
+            lat.pack_nibbles(lat.to_binary(white_pm1)))
+
+
+def unpack_lattice(black_words, white_words, dtype=jnp.int8):
+    return (lat.from_binary(lat.unpack_nibbles(black_words), dtype),
+            lat.from_binary(lat.unpack_nibbles(white_words), dtype))

@@ -1,0 +1,162 @@
+"""Simulation driver: engine selection, measurement schedule, checkpointing.
+
+Ties the three single-device engines (basic / multispin / tensorcore) and
+the distributed engine behind one interface.  State (lattice + RNG offset +
+step counter) checkpoints atomically to .npz; a restarted run continues the
+exact Philox stream (fault-tolerance contract, tested in tests/).
+"""
+from __future__ import annotations
+
+import dataclasses
+import os
+import tempfile
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import lattice as lat
+from . import metropolis, multispin, observables, tensorcore
+
+ENGINES = ("basic", "basic_philox", "multispin", "tensorcore")
+
+
+@dataclasses.dataclass
+class SimConfig:
+    n: int = 512
+    m: int = 512
+    temperature: float = 2.0
+    seed: int = 1234
+    engine: str = "multispin"
+    tc_block: int = 128
+    # 0.5 = random (hot) start; 1.0 = ordered start.  Steady-state
+    # measurements below Tc should use an ordered start: the paper (S5.3)
+    # reports that cold random starts on large lattices can fall into
+    # long-lived striped metastable states.
+    init_p_up: float = 0.5
+
+    @property
+    def inv_temp(self) -> float:
+        return 1.0 / self.temperature
+
+
+class Simulation:
+    """2D Ising Metropolis simulation with a pluggable engine."""
+
+    def __init__(self, config: SimConfig):
+        assert config.engine in ENGINES, config.engine
+        self.config = config
+        self.step_count = 0
+        key = jax.random.PRNGKey(config.seed)
+        full = lat.init_lattice(key, config.n, config.m,
+                                p_up=config.init_p_up)
+        self._set_lattice(full)
+
+    # -- state ------------------------------------------------------------
+    def _set_lattice(self, full: jax.Array) -> None:
+        cfg = self.config
+        if cfg.engine == "tensorcore":
+            self.state = tensorcore.decompose(full)
+        else:
+            b, w = lat.split_checkerboard(full)
+            if cfg.engine == "multispin":
+                self.state = multispin.pack_lattice(b, w)
+            else:
+                self.state = (b, w)
+
+    def full_lattice(self) -> jax.Array:
+        cfg = self.config
+        if cfg.engine == "tensorcore":
+            return tensorcore.recompose(self.state)
+        if cfg.engine == "multispin":
+            b, w = multispin.unpack_lattice(*self.state)
+        else:
+            b, w = self.state
+        return lat.merge_checkerboard(b, w)
+
+    # -- dynamics ---------------------------------------------------------
+    def run(self, n_sweeps: int) -> None:
+        cfg = self.config
+        beta = jnp.float32(cfg.inv_temp)
+        if cfg.engine == "basic":
+            key = jax.random.fold_in(jax.random.PRNGKey(cfg.seed),
+                                     self.step_count)
+            b, w, _ = metropolis.run_sweeps(*self.state, beta, key, n_sweeps)
+            self.state = (b, w)
+        elif cfg.engine == "basic_philox":
+            self.state = tuple(metropolis.run_sweeps_philox(
+                *self.state, beta, n_sweeps, seed=cfg.seed,
+                start_offset=2 * self.step_count))
+        elif cfg.engine == "multispin":
+            self.state = tuple(multispin.run_sweeps_packed(
+                *self.state, beta, n_sweeps, seed=cfg.seed,
+                start_offset=2 * self.step_count))
+        else:  # tensorcore
+            key = jax.random.fold_in(jax.random.PRNGKey(cfg.seed),
+                                     self.step_count)
+            planes, _ = tensorcore.run_sweeps_tc(
+                self.state, beta, key, n_sweeps, block=cfg.tc_block)
+            self.state = planes
+        self.step_count += n_sweeps
+
+    # -- measurement ------------------------------------------------------
+    def magnetization(self) -> float:
+        cfg = self.config
+        if cfg.engine == "tensorcore":
+            m = sum(p.astype(jnp.float32).sum() for p in self.state.values())
+            return float(m / (cfg.n * cfg.m))
+        if cfg.engine == "multispin":
+            b, w = multispin.unpack_lattice(*self.state)
+        else:
+            b, w = self.state
+        return float(observables.magnetization(b, w))
+
+    def energy(self) -> float:
+        b, w = lat.split_checkerboard(self.full_lattice())
+        return float(observables.energy_per_spin(b, w))
+
+    def trajectory(self, n_measure: int, sweeps_between: int,
+                   thermalize: int = 0) -> np.ndarray:
+        """Run and collect magnetization samples."""
+        if thermalize:
+            self.run(thermalize)
+        out = np.empty(n_measure, np.float32)
+        for i in range(n_measure):
+            self.run(sweeps_between)
+            out[i] = self.magnetization()
+        return out
+
+    # -- fault tolerance ---------------------------------------------------
+    def save(self, path: str) -> None:
+        """Atomic checkpoint (write temp + rename)."""
+        cfg = self.config
+        arrays = {}
+        if cfg.engine == "tensorcore":
+            for k, v in self.state.items():
+                arrays[f"plane_{k}"] = np.asarray(v)
+        else:
+            arrays["s0"], arrays["s1"] = (np.asarray(s) for s in self.state)
+        fd, tmp = tempfile.mkstemp(dir=os.path.dirname(path) or ".",
+                                   suffix=".tmp")
+        with os.fdopen(fd, "wb") as f:
+            np.savez(f, step_count=self.step_count,
+                     engine=cfg.engine, n=cfg.n, m=cfg.m,
+                     temperature=cfg.temperature, seed=cfg.seed, **arrays)
+        os.replace(tmp, path)
+
+    @classmethod
+    def restore(cls, path: str) -> "Simulation":
+        with np.load(path, allow_pickle=False) as z:
+            cfg = SimConfig(n=int(z["n"]), m=int(z["m"]),
+                            temperature=float(z["temperature"]),
+                            seed=int(z["seed"]), engine=str(z["engine"]))
+            sim = cls.__new__(cls)
+            sim.config = cfg
+            sim.step_count = int(z["step_count"])
+            if cfg.engine == "tensorcore":
+                sim.state = {k: jnp.asarray(z[f"plane_{k}"])
+                             for k in ("00", "01", "10", "11")}
+            else:
+                sim.state = (jnp.asarray(z["s0"]), jnp.asarray(z["s1"]))
+        return sim

@@ -1,0 +1,158 @@
+"""Tensor-core (MXU) engine: neighbor sums as banded matmuls (paper S3.2).
+
+The lattice is viewed as four interleaved planes ``sigma_xy[a,b] =
+full[2a+x, 2b+y]`` (the right-most layout in paper Fig. 1; black = 00/11,
+white = 01/10).  Sub-lattice-local neighbor sums are two batched
+``B x B`` matmuls against the banded kernel matrix ``K`` (Eq. 2-6) --
+executed on the MXU in bf16, the TPU analogue of cublasHgemmBatched on
+tensor cores -- followed by a boundary correction for the block edges and
+the Metropolis accept.
+
+The paper's point, which we reproduce quantitatively in the roofline
+analysis, is that only 2 of the B MACs per output contribute (useful-FLOP
+fraction 2/B = 1/64 at B=128) and the extra HBM round-trips make this a
+net loss; see ``repro/kernels/tensorcore`` for the beyond-paper fused
+variant that removes the round-trips.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from . import rng as crng
+
+BLOCK = 128  # paper: 256x256 sub-lattices = four 128x128 same-color blocks
+
+
+def make_kernel_matrix(block: int = BLOCK, dtype=jnp.bfloat16) -> jax.Array:
+    """Banded K: ones on the diagonal and superdiagonal (Eq. 2)."""
+    k = jnp.eye(block, dtype=dtype)
+    return k + jnp.eye(block, k=1, dtype=dtype)
+
+
+def decompose(full: jax.Array):
+    """(N, M) full lattice -> four (N/2, M/2) planes keyed '00','01','10','11'."""
+    return {
+        "00": full[0::2, 0::2], "01": full[0::2, 1::2],
+        "10": full[1::2, 0::2], "11": full[1::2, 1::2],
+    }
+
+
+def recompose(planes) -> jax.Array:
+    h, w = planes["00"].shape
+    full = jnp.zeros((2 * h, 2 * w), planes["00"].dtype)
+    full = full.at[0::2, 0::2].set(planes["00"])
+    full = full.at[0::2, 1::2].set(planes["01"])
+    full = full.at[1::2, 0::2].set(planes["10"])
+    full = full.at[1::2, 1::2].set(planes["11"])
+    return full
+
+
+def _blk(p: jax.Array, b: int) -> jax.Array:
+    """(H, W) -> (H/b, W/b, b, b) block view."""
+    h, w = p.shape
+    return p.reshape(h // b, b, w // b, b).transpose(0, 2, 1, 3)
+
+
+def _unblk(p: jax.Array) -> jax.Array:
+    nb, mb, b, _ = p.shape
+    return p.transpose(0, 2, 1, 3).reshape(nb * b, mb * b)
+
+
+def local_nn_sums(planes, block: int = BLOCK):
+    """Sub-lattice-local neighbor sums for all four planes via batched GEMMs.
+
+    nn(s00) = s01 K   + K^T s10        nn(s11) = s10 K^T + K s01
+    nn(s10) = s11 K   + K s00          nn(s01) = s00 K^T + K^T s11
+    """
+    k = make_kernel_matrix(block)
+    kt = k.T
+    b = {key: _blk(v.astype(jnp.bfloat16), block) for key, v in planes.items()}
+
+    def bmm_r(x, m):   # per-block x @ m
+        return jnp.einsum("nmij,jk->nmik", x, m,
+                          preferred_element_type=jnp.float32)
+
+    def bmm_l(m, x):   # per-block m @ x
+        return jnp.einsum("ij,nmjk->nmik", m, x,
+                          preferred_element_type=jnp.float32)
+
+    nn = {
+        "00": bmm_r(b["01"], k) + bmm_l(kt, b["10"]),
+        "11": bmm_r(b["10"], kt) + bmm_l(k, b["01"]),
+        "10": bmm_r(b["11"], k) + bmm_l(k, b["00"]),
+        "01": bmm_r(b["00"], kt) + bmm_l(kt, b["11"]),
+    }
+    return {key: _unblk(v) for key, v in nn.items()}
+
+
+def boundary_corrections(planes, block: int = BLOCK):
+    """Cross-block (and periodic-wrap) contributions missed by local sums.
+
+    This is the paper's standalone boundary kernel: for each plane the
+    block-edge rows/columns need one neighbor from the adjacent block.
+    """
+    f32 = {k: v.astype(jnp.float32) for k, v in planes.items()}
+    h, w = f32["00"].shape
+    col = jnp.arange(w) % block
+    row = jnp.arange(h) % block
+    first_c = (col == 0)[None, :]
+    last_c = (col == block - 1)[None, :]
+    first_r = (row == 0)[:, None]
+    last_r = (row == block - 1)[:, None]
+
+    def left(p):   # p[a, b-1] with wrap
+        return jnp.roll(p, 1, axis=1)
+
+    def right(p):
+        return jnp.roll(p, -1, axis=1)
+
+    def up(p):
+        return jnp.roll(p, 1, axis=0)
+
+    def down(p):
+        return jnp.roll(p, -1, axis=0)
+
+    return {
+        "00": first_c * left(f32["01"]) + first_r * up(f32["10"]),
+        "11": last_c * right(f32["10"]) + last_r * down(f32["01"]),
+        "10": first_c * left(f32["11"]) + last_r * down(f32["00"]),
+        "01": last_c * right(f32["00"]) + first_r * up(f32["11"]),
+    }
+
+
+def neighbor_sums_tc(planes, block: int = BLOCK):
+    """Complete neighbor sums = local GEMM sums + boundary corrections."""
+    nn = local_nn_sums(planes, block)
+    bc = boundary_corrections(planes, block)
+    return {k: nn[k] + bc[k] for k in nn}
+
+
+_COLOR_PLANES = {"black": ("00", "11"), "white": ("01", "10")}
+
+
+def update_color_tc(planes, color: str, inv_temp, key, block: int = BLOCK):
+    """Metropolis half-sweep for one color using MXU neighbor sums."""
+    nn = neighbor_sums_tc(planes, block)
+    out = dict(planes)
+    keys = jax.random.split(key, 2)
+    for sub, k in zip(_COLOR_PLANES[color], keys):
+        t = planes[sub].astype(jnp.float32)
+        acc = jnp.exp(-2.0 * inv_temp * nn[sub] * t)
+        u = jax.random.uniform(k, t.shape)
+        out[sub] = jnp.where(u < acc, -t, t).astype(planes[sub].dtype)
+    return out
+
+
+@functools.partial(jax.jit, static_argnames=("n_sweeps", "block"))
+def run_sweeps_tc(planes, inv_temp, key, n_sweeps: int, block: int = BLOCK):
+    def body(i, carry):
+        p, k = carry
+        k, kb, kw = jax.random.split(k, 3)
+        p = update_color_tc(p, "black", inv_temp, kb, block)
+        p = update_color_tc(p, "white", inv_temp, kw, block)
+        return (p, k)
+
+    return jax.lax.fori_loop(0, n_sweeps, body, (planes, key))

@@ -1,0 +1,1 @@
+from .pipeline import DataConfig, DataIterator, make_batch  # noqa: F401

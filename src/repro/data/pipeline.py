@@ -1,0 +1,97 @@
+"""Deterministic synthetic data pipeline with restart-exact skip-ahead.
+
+Batches are pure functions of (seed, step) via counter-based Philox --
+the same scheme the paper uses for simulation RNG (DESIGN.md S4): a
+restarted job passes the checkpointed step and receives bit-identical
+batches with no state replay.  Per-shape batch builders also serve as the
+dry-run's input factories (real arrays for execution, ShapeDtypeStructs
+via ``abstract=True``).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ArchConfig, ShapeConfig
+from repro.core import rng as crng
+
+
+@dataclasses.dataclass(frozen=True)
+class DataConfig:
+    seed: int = 0
+    # synthetic stream: tokens ~ philox(step, position) % vocab
+
+
+def _tokens(seed: int, step: int, shape, vocab: int):
+    n = int(np.prod(shape))
+    idx = jnp.arange(n, dtype=jnp.uint32)
+    bits = crng.philox4x32(jnp.uint32(step), jnp.uint32(0), idx,
+                           jnp.uint32(1), jnp.uint32(seed),
+                           jnp.uint32(0))[0]
+    return (bits % jnp.uint32(max(vocab - 1, 1))).astype(
+        jnp.int32).reshape(shape)
+
+
+def make_batch(cfg: ArchConfig, shape: ShapeConfig, *, step: int = 0,
+               seed: int = 0, abstract: bool = False,
+               batch_override: int = 0, seq_override: int = 0) -> Dict:
+    """One training/prefill batch for (arch, shape) at ``step``."""
+    b = batch_override or shape.global_batch
+    s = seq_override or shape.seq_len
+    out: Dict = {}
+
+    if cfg.family == "audio":
+        if abstract:
+            out["frames"] = jax.ShapeDtypeStruct((b, cfg.enc_seq,
+                                                  cfg.d_model), jnp.bfloat16)
+            out["tokens"] = jax.ShapeDtypeStruct((b, s), jnp.int32)
+            out["labels"] = jax.ShapeDtypeStruct((b, s), jnp.int32)
+            return out
+        key = jax.random.fold_in(jax.random.PRNGKey(seed), step)
+        out["frames"] = jax.random.normal(
+            key, (b, cfg.enc_seq, cfg.d_model), jnp.bfloat16)
+        out["tokens"] = _tokens(seed, 2 * step, (b, s), cfg.vocab)
+        out["labels"] = _tokens(seed, 2 * step + 1, (b, s), cfg.vocab)
+        return out
+
+    text_len = s - cfg.prefix_len if cfg.family == "vlm" else s
+    if abstract:
+        out["tokens"] = jax.ShapeDtypeStruct((b, text_len), jnp.int32)
+        out["labels"] = jax.ShapeDtypeStruct((b, s), jnp.int32)
+        if cfg.family == "vlm":
+            out["patch_emb"] = jax.ShapeDtypeStruct(
+                (b, cfg.prefix_len, cfg.d_model), jnp.bfloat16)
+        return out
+
+    out["tokens"] = _tokens(seed, 2 * step, (b, text_len), cfg.vocab)
+    out["labels"] = _tokens(seed, 2 * step + 1, (b, s), cfg.vocab)
+    if cfg.family == "vlm":
+        key = jax.random.fold_in(jax.random.PRNGKey(seed), step)
+        out["patch_emb"] = jax.random.normal(
+            key, (b, cfg.prefix_len, cfg.d_model), jnp.bfloat16)
+    return out
+
+
+class DataIterator:
+    """Stateful wrapper: next() yields (step, batch); skip(step) restores."""
+
+    def __init__(self, cfg: ArchConfig, shape: ShapeConfig, seed: int = 0,
+                 batch_override: int = 0, seq_override: int = 0):
+        self.cfg, self.shape, self.seed = cfg, shape, seed
+        self.step = 0
+        self._b, self._s = batch_override, seq_override
+
+    def skip_to(self, step: int) -> None:
+        self.step = step
+
+    def __next__(self):
+        batch = make_batch(self.cfg, self.shape, step=self.step,
+                           seed=self.seed, batch_override=self._b,
+                           seq_override=self._s)
+        out = (self.step, batch)
+        self.step += 1
+        return out

@@ -1,0 +1,112 @@
+"""Pallas TPU kernel: multi-spin-coded Metropolis update (paper S3.3).
+
+The TPU adaptation of the paper's flagship engine: 0/1 spins packed 4 bits
+each into uint32 VPU lanes (8/word vs the paper's 16-per-uint64 -- the VPU
+datapath is 32-bit), neighbor sums in THREE packed adds per word, Philox
+drawn in-kernel (no random array traffic, cuRAND-style skip-ahead), and a
+10-entry threshold LUT replacing per-spin ``exp`` (DESIGN.md S6.3).
+
+Grid: row blocks of the packed word plane at full width, with periodic
+neighbors supplied by modulo index_maps (i-1, i, i+1) -- the VMEM staging
+that plays the role of the paper's shared-memory tile.  Per grid step the
+VMEM working set is 4 row blocks + LUT; block_rows trades VMEM footprint
+against grid overhead (swept in benchmarks/).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.core import rng as crng
+from repro.core import lattice as lat
+
+DEFAULT_BLOCK_ROWS = 256
+_NIB = lat.NIBBLE_BITS
+
+
+def _kernel(seeds_ref, table_ref, target_ref, op_m1_ref, op_0_ref,
+            op_p1_ref, out_ref, *, is_black: bool, block_rows: int):
+    op = op_0_ref[...]
+    up_row = op_m1_ref[...][-1:, :]
+    down_row = op_p1_ref[...][:1, :]
+    up = jnp.concatenate([up_row, op[:-1, :]], axis=0)
+    down = jnp.concatenate([op[1:, :], down_row], axis=0)
+
+    # side word: splice the one boundary nibble (paper Fig. 3)
+    nxt = jnp.roll(op, -1, axis=1)
+    prv = jnp.roll(op, 1, axis=1)
+    plus = (op >> np.uint32(_NIB)) | (nxt << np.uint32(32 - _NIB))
+    minus = (op << np.uint32(_NIB)) | (prv >> np.uint32(32 - _NIB))
+    parity = jax.lax.broadcasted_iota(jnp.uint32, op.shape, 0) % np.uint32(2)
+    if is_black:
+        side = jnp.where(parity == 1, plus, minus)
+    else:
+        side = jnp.where(parity == 1, minus, plus)
+    nn_words = up + down + op + side          # 3 packed adds / 8 spins
+
+    target = target_ref[...]
+    seed = seeds_ref[0]
+    offset = seeds_ref[1]
+    i = pl.program_id(0)
+    w = op.shape[1]
+    rows = (i * block_rows
+            + jax.lax.broadcasted_iota(jnp.int32, op.shape, 0))
+    cols = jax.lax.broadcasted_iota(jnp.int32, op.shape, 1)
+    widx = (rows * w + cols).astype(jnp.uint32)
+    zero = jnp.zeros_like(widx)
+    lo = crng.philox4x32(np.uint32(2) * offset, zero, widx, zero,
+                         seed, jnp.uint32(0))
+    hi = crng.philox4x32(np.uint32(2) * offset + np.uint32(1), zero, widx,
+                         zero, seed, jnp.uint32(0))
+    draws = lo + hi  # 8 uint32 per word
+
+    inv_temp = table_ref[0]
+    flip_word = jnp.zeros_like(target)
+    for nib in range(lat.SPINS_PER_WORD):
+        sh = np.uint32(nib * _NIB)
+        s = (target >> sh) & np.uint32(1)
+        nn = (nn_words >> sh) & np.uint32(0xF)
+        # closed-form acceptance (gather-free, fusible; == LUT values)
+        p = jnp.exp(-2.0 * inv_temp * (2.0 * s.astype(jnp.float32) - 1.0)
+                    * (2.0 * nn.astype(jnp.float32) - 4.0))
+        u = crng.u32_to_uniform(draws[nib])
+        flip = (u < p).astype(jnp.uint32)
+        flip_word = flip_word | (flip << sh)
+    out_ref[...] = target ^ flip_word
+
+
+def multispin_update(target_words, op_words, inv_temp, *, is_black: bool,
+                     seed: int = 0, offset=0,
+                     block_rows: int = DEFAULT_BLOCK_ROWS,
+                     interpret: bool = False):
+    """One packed color half-sweep; bit-exact vs core.multispin oracle."""
+    n, w = target_words.shape
+    block_rows = min(block_rows, n)
+    assert n % block_rows == 0 and block_rows % 2 == 0
+    nb = n // block_rows
+
+    beta = jnp.array([inv_temp], jnp.float32)
+    seeds = jnp.array([seed & 0xFFFFFFFF, offset], jnp.uint32)
+
+    row_spec = pl.BlockSpec((block_rows, w), lambda i: (i, 0))
+    return pl.pallas_call(
+        functools.partial(_kernel, is_black=is_black, block_rows=block_rows),
+        grid=(nb,),
+        in_specs=[
+            pl.BlockSpec(memory_space=pltpu.SMEM),   # seed/offset
+            pl.BlockSpec(memory_space=pltpu.SMEM),   # inv_temp
+            row_spec,
+            pl.BlockSpec((block_rows, w), lambda i: ((i - 1) % nb, 0)),
+            row_spec,
+            pl.BlockSpec((block_rows, w), lambda i: ((i + 1) % nb, 0)),
+        ],
+        out_specs=row_spec,
+        out_shape=jax.ShapeDtypeStruct(target_words.shape,
+                                       target_words.dtype),
+        interpret=interpret,
+    )(seeds, beta, target_words, op_words, op_words, op_words)

@@ -1,0 +1,15 @@
+"""Pure-jnp oracle for the multispin kernel (delegates to the core engine).
+
+The core engine (repro.core.multispin) keys its Philox stream on the global
+word index and half-sweep offset exactly as the kernel does, so the match
+is bit-exact, not merely allclose.
+"""
+from __future__ import annotations
+
+from repro.core import multispin as ms
+
+
+def multispin_update_ref(target_words, op_words, inv_temp, *,
+                         is_black: bool, seed: int = 0, offset=0):
+    return ms.update_color_packed(target_words, op_words, inv_temp,
+                                  is_black, seed, offset)

@@ -1,0 +1,13 @@
+"""Pure-jnp oracle for the stencil kernel (delegates to the core engine)."""
+from __future__ import annotations
+
+from repro.core import metropolis as metro
+
+
+def stencil_update_ref(target, op_plane, inv_temp, *, is_black: bool,
+                       uniforms=None, seed: int = 0, offset=0):
+    if uniforms is not None:
+        return metro.update_color(target, op_plane, uniforms, inv_temp,
+                                  is_black)
+    return metro.update_color_philox(target, op_plane, inv_temp, is_black,
+                                     seed, offset)

@@ -1,0 +1,29 @@
+"""Jitted wrappers for the fused tensorcore kernel."""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from .tensorcore import tensorcore_update
+
+
+@functools.partial(jax.jit, static_argnames=("n_sweeps", "seed", "block",
+                                             "interpret"))
+def run_sweeps_tensorcore(planes, inv_temp, n_sweeps: int, seed: int = 0,
+                          start_offset=0, block: int = 128,
+                          interpret: bool = False):
+    """n_sweeps full sweeps (black then white) of the fused MXU engine."""
+    start_offset = jnp.uint32(start_offset)
+
+    def body(i, p):
+        off = start_offset + 2 * jnp.uint32(i)
+        p = tensorcore_update(p, "black", inv_temp, seed=seed, offset=off,
+                              block=block, interpret=interpret)
+        p = tensorcore_update(p, "white", inv_temp, seed=seed,
+                              offset=off + 1, block=block,
+                              interpret=interpret)
+        return p
+
+    return jax.lax.fori_loop(0, n_sweeps, body, planes)

@@ -1,0 +1,35 @@
+"""Pure-jnp oracle for the fused tensorcore kernel.
+
+Computes complete neighbor sums with the core engine's global einsum +
+boundary-correction path and replicates the kernel's Philox stream
+(lane 0 -> first target plane, lane 1 -> second), so the comparison is
+exact, not merely allclose.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.core import rng as crng
+from repro.core.tensorcore import neighbor_sums_tc
+
+
+def tensorcore_update_ref(planes: dict, color: str, inv_temp, *,
+                          seed: int = 0, offset=0, block: int = 128) -> dict:
+    is_black = color == "black"
+    t1k, t2k = ("00", "11") if is_black else ("10", "01")
+    nn = neighbor_sums_tc(planes, block)
+
+    h, w = planes[t1k].shape
+    gidx = jnp.arange(h * w, dtype=jnp.uint32).reshape(h, w)
+    zero = jnp.zeros_like(gidx)
+    r = crng.philox4x32(jnp.uint32(offset), zero, gidx, zero,
+                        jnp.uint32(seed & 0xFFFFFFFF), jnp.uint32(0))
+    u1 = crng.u32_to_uniform(r[0])
+    u2 = crng.u32_to_uniform(r[1])
+
+    out = dict(planes)
+    for key, u in ((t1k, u1), (t2k, u2)):
+        t = planes[key].astype(jnp.float32)
+        acc = jnp.exp(-2.0 * inv_temp * nn[key] * t)
+        out[key] = jnp.where(u < acc, -t, t).astype(planes[key].dtype)
+    return out

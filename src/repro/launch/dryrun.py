@@ -1,0 +1,343 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+"""Multi-pod dry-run: lower + compile every (arch x shape x mesh) cell.
+
+This is the proof that the distribution config is coherent without real
+hardware: ``jax.jit(step, in_shardings, out_shardings).lower(...)
+.compile()`` must succeed on the single-pod (16x16) and multi-pod
+(2x16x16) production meshes for every assigned architecture x input shape,
+plus the paper's own Ising workload.  Parameters/optimizer/caches are
+``jax.eval_shape`` abstractions -- nothing is allocated.
+
+Per cell we record memory_analysis, cost_analysis, the parsed per-kind
+collective bytes, and the three roofline terms into a JSON that
+EXPERIMENTS.md S Dry-run / S Roofline are generated from.
+
+Usage:
+  python -m repro.launch.dryrun --arch all --shape all --mesh both \
+      --out results/dryrun.json
+  python -m repro.launch.dryrun --arch ising-multispin --mesh multi
+"""
+import argparse
+import json
+import time
+import traceback
+from typing import Dict, Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs import ARCH_IDS, SHAPES, get_config, get_smoke_config
+from repro.configs.base import shape_applicable
+from repro.data.pipeline import make_batch
+from repro.launch import roofline
+from repro.launch.mesh import make_production_mesh
+from repro.models import decode_step, forward, init_cache, init_model
+from repro.train import OptConfig, make_prefill_step, make_serve_step, \
+    make_train_step, opt_init
+from repro.train.sharding import (activation_spec, batch_specs, cache_specs,
+                                  mesh_axes, param_shardings)
+
+ISING_SHAPES = {
+    # (rows, cols) of the full lattice; engine = packed multispin words
+    "lat_256k": (262144, 262144),     # 6.9e10 spins ~ paper's 30GB/GPU x16
+    "lat_1m": (1048576, 1048576),     # 1.1e12 spins: the 512-chip cell
+}
+
+
+def _ns(mesh, spec):
+    return NamedSharding(mesh, spec)
+
+
+def _tree_shardings(mesh, specs):
+    return jax.tree.map(lambda s: _ns(mesh, s), specs,
+                        is_leaf=lambda x: isinstance(x, P))
+
+
+# ---------------------------------------------------------------------------
+# LM cells
+# ---------------------------------------------------------------------------
+
+def auto_fsdp(a_params, mesh) -> bool:
+    """H2.1 (EXPERIMENTS.md S Perf): FSDP weight all-gathers are pure
+    collective waste when params + optimizer state already fit under TP
+    alone.  Enable FSDP only when the TP-sharded state (16 bytes/param:
+    f32 master + grad + 2 Adam moments) would exceed ~6 GB/device."""
+    n_params = sum(float(l.size) for l in jax.tree.leaves(a_params))
+    tp = mesh.shape[list(mesh.axis_names)[-1]]
+    return n_params * 16.0 / tp > 6e9
+
+
+def scan_length(cfg, kind: str) -> int:
+    """Trip count of the dominant layer scan (H10 cost correction)."""
+    if cfg.family == "ssm":
+        return 1                      # python loop: costed exactly
+    if cfg.family == "moe":
+        return cfg.n_layers - cfg.first_dense
+    return cfg.n_layers
+
+
+def lower_lm_cell(arch: str, shape_name: str, mesh, *, fsdp=None,
+                  smoke: bool = False, sp: bool = True,
+                  scan_unroll: int = 1, microbatches=None):
+    """Build + lower one (arch, shape, mesh) cell. Returns lowered.
+
+    fsdp: True/False to force, None = auto policy.  scan_unroll feeds the
+    H10 cost correction (compile at 1 and 2, diff = per-layer cost)."""
+    cfg = get_smoke_config(arch) if smoke else get_config(arch)
+    shape = SHAPES[shape_name]
+    ok, why = shape_applicable(cfg, shape)
+    if not ok:
+        return None, why
+    sliding = cfg.long_sliding_window if shape.name == "long_500k" else 0
+
+    key = jax.random.PRNGKey(0)
+    a_params = jax.eval_shape(lambda k: init_model(cfg, k), key)
+    if fsdp is None:
+        fsdp = auto_fsdp(a_params, mesh)
+    p_sh = param_shardings(cfg, a_params, mesh, fsdp=fsdp)
+    act_sh = _ns(mesh, activation_spec(mesh, sp=sp))
+
+    if shape.kind == "train":
+        a_opt = jax.eval_shape(opt_init, a_params)
+        o_sh = {"mu": p_sh, "nu": p_sh,
+                "count": _ns(mesh, P())}
+        batch = make_batch(cfg, shape, abstract=True)
+        b_sh = _tree_shardings(mesh, batch_specs(
+            cfg, mesh, global_batch=shape.global_batch))
+        from repro.train.step import cross_entropy
+
+        def loss_fn(p, bb):
+            logits, aux = forward(cfg, p, bb, remat=True,
+                                  sliding_window=sliding,
+                                  act_sharding=act_sh,
+                                  scan_unroll=scan_unroll)
+            ce = cross_entropy(logits, bb["labels"])
+            return ce + 0.01 * aux, (ce, aux)
+
+        # H9: gradient accumulation bounds live activation memory; 4
+        # microbatches for full-size train cells (smoke stays at 1).
+        # The cost-accounting pass (microbatches=1 override) avoids
+        # nesting the layer scan inside a second uncounted loop.
+        if microbatches is None:
+            mb = 1 if smoke or shape.global_batch % 4 else 4
+        else:
+            mb = microbatches
+        step = make_train_step(cfg, OptConfig(), loss_fn=loss_fn,
+                               microbatches=mb)
+        jitted = jax.jit(step,
+                         in_shardings=(p_sh, o_sh, b_sh),
+                         out_shardings=(p_sh, o_sh, None),
+                         donate_argnums=(0, 1))
+        return jitted.lower(a_params, a_opt, batch), None
+
+    if shape.kind == "prefill":
+        batch = make_batch(cfg, shape, abstract=True)
+        batch.pop("labels")
+        b_sh = {k: v for k, v in _tree_shardings(
+            mesh, batch_specs(cfg, mesh,
+                              global_batch=shape.global_batch)).items()
+            if k in batch}
+
+        def prefill(params, b):
+            logits, _ = forward(cfg, params, b, remat=False,
+                                sliding_window=sliding,
+                                act_sharding=act_sh,
+                                scan_unroll=scan_unroll)
+            return logits
+        jitted = jax.jit(prefill, in_shardings=(p_sh, b_sh),
+                         out_shardings=None)
+        return jitted.lower(a_params, batch), None
+
+    # decode
+    b = shape.global_batch
+    maxlen = shape.seq_len
+    a_cache = jax.eval_shape(
+        lambda: init_cache(cfg, b, maxlen, window=sliding))
+    c_specs = cache_specs(cfg, a_cache, mesh, batch=b)
+    c_sh = jax.tree.map(lambda s: _ns(mesh, s), c_specs,
+                        is_leaf=lambda x: isinstance(x, P))
+    dp_axes, _ = mesh_axes(mesh)
+    dp = 1
+    for a in dp_axes:
+        dp *= mesh.shape[a]
+    tok_spec = P(dp_axes if len(dp_axes) > 1 else dp_axes[0], None) \
+        if b % dp == 0 else P(None, None)
+    tokens = jax.ShapeDtypeStruct((b, 1), jnp.int32)
+
+    def serve(params, cache, toks):
+        logits, new_cache = decode_step(cfg, params, cache, toks,
+                                        sliding_window=sliding,
+                                        scan_unroll=scan_unroll)
+        nxt = jnp.argmax(logits[:, -1], axis=-1)[:, None]
+        return nxt.astype(toks.dtype), new_cache
+
+    jitted = jax.jit(serve,
+                     in_shardings=(p_sh, c_sh, _ns(mesh, tok_spec)),
+                     out_shardings=None, donate_argnums=(1,))
+    return jitted.lower(a_params, a_cache, tokens), None
+
+
+# ---------------------------------------------------------------------------
+# Ising cells (the paper's workload on the production mesh)
+# ---------------------------------------------------------------------------
+
+def lower_ising_cell(shape_name: str, mesh, engine: str = "multispin"):
+    """Distributed Ising sweep on packed uint32 words (multispin) or int8
+    planes (basic), pencil-decomposed over the whole mesh."""
+    from repro.core import distributed as dist
+
+    n, m = ISING_SHAPES[shape_name]
+    if engine == "multispin":
+        step_fn, sharding = dist.make_packed_ising_step(mesh, n=n, m=m,
+                                                        seed=0, n_sweeps=1)
+        half_words = m // 2 // 8
+        black = jax.ShapeDtypeStruct((n, half_words), jnp.uint32)
+        white = jax.ShapeDtypeStruct((n, half_words), jnp.uint32)
+    else:
+        step_fn, sharding = dist.make_ising_step(mesh, n=n, m=m, seed=0,
+                                                 n_sweeps=1)
+        black = jax.ShapeDtypeStruct((n, m // 2), jnp.int8)
+        white = jax.ShapeDtypeStruct((n, m // 2), jnp.int8)
+    beta = jax.ShapeDtypeStruct((), jnp.float32)
+    sweep0 = jax.ShapeDtypeStruct((), jnp.uint32)
+    return step_fn.lower(black, white, beta, sweep0), None
+
+
+# ---------------------------------------------------------------------------
+# cell runner
+# ---------------------------------------------------------------------------
+
+def run_cell(arch: str, shape_name: str, mesh_kind: str, *,
+             fsdp=None, smoke: bool = False,
+             verbose: bool = True) -> Dict:
+    mesh = make_production_mesh(multi_pod=(mesh_kind == "multi"))
+    rec: Dict = {"arch": arch, "shape": shape_name, "mesh": mesh_kind,
+                 "chips": mesh.size}
+    t0 = time.time()
+    try:
+        if arch.startswith("ising"):
+            engine = arch.split("-", 1)[1] if "-" in arch else "multispin"
+            lowered, skip = lower_ising_cell(shape_name, mesh, engine)
+            n, m = ISING_SHAPES[shape_name]
+            rec["spins"] = float(n) * m
+        else:
+            with mesh:
+                lowered, skip = lower_lm_cell(arch, shape_name, mesh,
+                                              fsdp=fsdp, smoke=smoke)
+        if lowered is None:
+            rec["status"] = "skipped"
+            rec["skip_reason"] = skip
+            return rec
+        compiled = lowered.compile()
+        rec["compile_s"] = round(time.time() - t0, 1)
+        cost = roofline.extract_cost(compiled)
+        mem = roofline.memory_per_device(compiled)
+        coll = roofline.collective_bytes(compiled.as_text())
+
+        if not arch.startswith("ising") and not smoke:
+            # H10: XLA cost_analysis counts while-loop bodies ONCE; the
+            # layer scan has L iterations.  Compile again with the scan
+            # body unrolled x2 (cost accounting at microbatches=1) and
+            # reconstruct: total = c1 + (c2 - c1) * (L - 1).
+            from repro.configs import get_config
+            cfg = get_config(arch)
+            L = scan_length(cfg, "")
+            if L > 1:
+                with mesh:
+                    low1, _ = lower_lm_cell(arch, shape_name, mesh,
+                                            fsdp=fsdp, scan_unroll=1,
+                                            microbatches=1)
+                    low2, _ = lower_lm_cell(arch, shape_name, mesh,
+                                            fsdp=fsdp, scan_unroll=2,
+                                            microbatches=1)
+                c1 = roofline.extract_cost(low1.compile())
+                comp2 = low2.compile()
+                c2 = roofline.extract_cost(comp2)
+                coll1 = roofline.collective_bytes(low1.compile().as_text())
+                coll2 = roofline.collective_bytes(comp2.as_text())
+                cost = {k: c1[k] + max(c2[k] - c1[k], 0.0) * (L - 1)
+                        for k in c1}
+                coll = {k: coll1.get(k, 0)
+                        + max(coll2.get(k, 0) - coll1.get(k, 0), 0)
+                        * (L - 1) for k in coll1}
+                rec["scan_trip_count"] = L
+                rec["cost_correction"] = "unroll-diff (H10)"
+
+        terms = roofline.roofline_terms(cost["flops"], cost["bytes"], coll,
+                                        mesh.size)
+        rec.update(status="ok", **cost, collectives=coll, **terms,
+                   memory=mem)
+        if verbose:
+            print(f"-- {arch} x {shape_name} x {mesh_kind} "
+                  f"({rec['compile_s']}s)")
+            print(f"   memory_analysis: {mem}")
+            print(f"   cost_analysis: flops={cost['flops']:.3e} "
+                  f"bytes={cost['bytes']:.3e}")
+            print(f"   collectives: { {k: v for k, v in coll.items() if v} }")
+            print(f"   roofline: compute={terms['t_compute_s']:.4f}s "
+                  f"memory={terms['t_memory_s']:.4f}s "
+                  f"collective={terms['t_collective_s']:.4f}s "
+                  f"dominant={terms['dominant']}")
+    except Exception as e:  # a failing cell is a bug; record and continue
+        rec["status"] = "error"
+        rec["error"] = f"{type(e).__name__}: {e}"
+        rec["traceback"] = traceback.format_exc()[-2000:]
+        if verbose:
+            print(f"-- {arch} x {shape_name} x {mesh_kind} FAILED: "
+                  f"{rec['error']}")
+    return rec
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="all",
+                    help="arch id | all | ising-multispin | ising-basic")
+    ap.add_argument("--shape", default="all")
+    ap.add_argument("--mesh", default="both",
+                    choices=["single", "multi", "both"])
+    ap.add_argument("--out", default="results/dryrun.json")
+    ap.add_argument("--no-fsdp", action="store_true",
+                    help="force FSDP off (default: auto policy)")
+    ap.add_argument("--smoke", action="store_true",
+                    help="reduced configs (CI sanity of the harness)")
+    args = ap.parse_args(argv)
+
+    archs = list(ARCH_IDS) if args.arch == "all" else [args.arch]
+    meshes = (["single", "multi"] if args.mesh == "both" else [args.mesh])
+
+    results = []
+    if os.path.exists(args.out):
+        with open(args.out) as f:
+            results = json.load(f)
+    done = {(r["arch"], r["shape"], r["mesh"]) for r in results
+            if r.get("status") in ("ok", "skipped")}
+
+    for arch in archs:
+        shapes = (list(ISING_SHAPES) if arch.startswith("ising")
+                  else list(SHAPES))
+        if args.shape != "all":
+            shapes = [args.shape]
+        for shape in shapes:
+            for mk in meshes:
+                if (arch, shape, mk) in done:
+                    continue
+                rec = run_cell(arch, shape, mk,
+                               fsdp=False if args.no_fsdp else None,
+                               smoke=args.smoke)
+                results = [r for r in results
+                           if (r["arch"], r["shape"], r["mesh"])
+                           != (arch, shape, mk)]
+                results.append(rec)
+                os.makedirs(os.path.dirname(args.out) or ".",
+                            exist_ok=True)
+                with open(args.out, "w") as f:
+                    json.dump(results, f, indent=1)
+    bad = [r for r in results if r.get("status") == "error"]
+    print(f"\n{len(results)} cells, {len(bad)} errors")
+    return 1 if bad else 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -1,0 +1,168 @@
+"""Roofline-term extraction from compiled dry-run artifacts.
+
+Per (arch x shape x mesh):
+  compute   = HLO_FLOPs  / (chips * PEAK_FLOPS)
+  memory    = HLO_bytes  / (chips * HBM_BW)
+  collective= coll_bytes / (chips * ICI_BW)
+
+HLO_FLOPs / HLO_bytes come from ``compiled.cost_analysis()``.  Collective
+bytes are NOT in cost_analysis: we parse the compiled (post-SPMD) HLO text,
+build a name->shape table from op definitions, and sum the operand sizes of
+every all-gather / all-reduce / reduce-scatter / all-to-all /
+collective-permute.  Hardware constants: TPU v5e-class -- 197 bf16
+TFLOP/s, 819 GB/s HBM, ~50 GB/s/link ICI (task spec).
+"""
+from __future__ import annotations
+
+import re
+from typing import Dict
+
+PEAK_FLOPS = 197e12      # bf16 / chip
+HBM_BW = 819e9           # bytes/s / chip
+ICI_BW = 50e9            # bytes/s / link
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8, "c64": 8,
+    "token": 0, "s4": 1, "u4": 1, "f8e4m3fn": 1, "f8e5m2": 1,
+}
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+_DEF_RE = re.compile(r"^\s*(?:ROOT\s+)?%?([\w\.\-]+)\s*=\s*(.+?)\s+"
+                     r"([a-z][\w\-]*)\(")
+_COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+
+def _shape_bytes(shape_str: str) -> int:
+    """Total bytes of a (possibly tuple) HLO shape string."""
+    total = 0
+    for m in _SHAPE_RE.finditer(shape_str):
+        dt, dims = m.group(1), m.group(2)
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                if d:
+                    n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def collective_bytes(hlo_text: str) -> Dict[str, int]:
+    """Sum operand bytes per collective kind from HLO text.
+
+    Uses each op's result shape for in-place-ish collectives (all-reduce,
+    collective-permute) and the max(result, summed-operands) heuristic via
+    the name->shape table for reshape-ing collectives.
+    """
+    shapes: Dict[str, str] = {}
+    per_kind = {k: 0 for k in _COLLECTIVES}
+    lines = hlo_text.splitlines()
+    for ln in lines:
+        m = _DEF_RE.match(ln)
+        if m:
+            shapes[m.group(1)] = m.group(2)
+    operand_re = re.compile(r"%?([\w\.\-]+)")
+    for ln in lines:
+        m = _DEF_RE.match(ln)
+        if not m:
+            continue
+        name, result_shape, op = m.groups()
+        kind = next((k for k in _COLLECTIVES if op.startswith(k)), None)
+        if kind is None:
+            continue
+        # operand list: text between the first '(' and matching ')'
+        inner = ln[ln.index(op) + len(op) + 1:]
+        depth = 1
+        args = []
+        buf = ""
+        for ch in inner:
+            if ch == "(":
+                depth += 1
+            elif ch == ")":
+                depth -= 1
+                if depth == 0:
+                    args.append(buf)
+                    break
+            if depth >= 1 and ch != ")":
+                buf += ch
+        operand_bytes = 0
+        for tok in args[0].split(",") if args else []:
+            tok = tok.strip()
+            mm = operand_re.match(tok.lstrip("%"))
+            if mm and mm.group(1) in shapes:
+                operand_bytes += _shape_bytes(shapes[mm.group(1)])
+        result_bytes = _shape_bytes(result_shape)
+        per_kind[kind] += max(operand_bytes, result_bytes) \
+            if kind in ("all-gather",) else (operand_bytes or result_bytes)
+    return per_kind
+
+
+def extract_cost(compiled) -> Dict[str, float]:
+    ca = compiled.cost_analysis()
+    if isinstance(ca, (list, tuple)):
+        ca = ca[0]
+    flops = float(ca.get("flops", 0.0))
+    byts = float(ca.get("bytes accessed", 0.0))
+    return {"flops": flops, "bytes": byts}
+
+
+def memory_per_device(compiled):
+    try:
+        ma = compiled.memory_analysis()
+    except Exception:
+        return None
+    if ma is None:
+        return None
+    out = {}
+    for attr in ("argument_size_in_bytes", "output_size_in_bytes",
+                 "temp_size_in_bytes", "generated_code_size_in_bytes",
+                 "alias_size_in_bytes"):
+        v = getattr(ma, attr, None)
+        if v is not None:
+            out[attr] = int(v)
+    return out
+
+
+def roofline_terms(flops: float, byts: float, coll: Dict[str, int],
+                   n_chips: int) -> Dict[str, float]:
+    """cost_analysis on an SPMD module is per-device already; collective
+    bytes parsed from the partitioned HLO are likewise per-device."""
+    coll_total = float(sum(coll.values()))
+    t_compute = flops / PEAK_FLOPS
+    t_memory = byts / HBM_BW
+    t_coll = coll_total / ICI_BW
+    dom = max((t_compute, "compute"), (t_memory, "memory"),
+              (t_coll, "collective"))[1]
+    return {"t_compute_s": t_compute, "t_memory_s": t_memory,
+            "t_collective_s": t_coll, "dominant": dom,
+            "coll_bytes": coll_total}
+
+
+def model_flops(n_params_active: float, n_tokens: float,
+                kind: str) -> float:
+    """6ND for a train step, 2ND for forward-only (prefill/decode)."""
+    return (6.0 if kind == "train" else 2.0) * n_params_active * n_tokens
+
+
+def count_params(abstract_params, active_moe_frac: float = 1.0,
+                 moe_paths=("moe/wi", "moe/wg", "moe/wo")) -> Dict[str, float]:
+    """(total, active) param counts from an abstract (eval_shape) pytree."""
+    import jax
+    total = 0.0
+    active = 0.0
+    flat = jax.tree_util.tree_flatten_with_path(abstract_params)[0]
+    for path, leaf in flat:
+        key = "/".join(str(getattr(k, "key", getattr(k, "idx", k)))
+                       for k in path)
+        n = float(leaf.size)
+        total += n
+        if any(p in key for p in moe_paths):
+            active += n * active_moe_frac
+        elif "embed" in key:
+            active += 0.0  # embedding lookups are gathers, not matmuls
+        else:
+            active += n
+    return {"total": total, "active": active}

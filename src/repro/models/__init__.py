@@ -1,0 +1,2 @@
+from .model import init_model, forward, xlstm_kinds  # noqa: F401
+from .decode import init_cache, decode_step  # noqa: F401

@@ -1,0 +1,242 @@
+"""Decode path: cache construction + single-token decode_step per family.
+
+Cache layout: per-stack stacked arrays with a leading layer axis, threaded
+through the same ``lax.scan`` as the forward pass, plus one global
+``length`` scalar.  KV caches are bf16; SSM/recurrent states are f32.
+
+Sliding-window long-context decode uses a RING-BUFFER cache of
+``window`` slots (slot = position % window, keys roped at write time, so
+slots carry absolute positions); see EXPERIMENTS.md S Perf H3 -- this is
+what makes the 500k-context cells run at the memory-roofline minimum.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from . import layers as L
+from . import ssm as S
+from .model import (_apply_attn_block, _apply_moe_block, _norm_apply,
+                    _sinusoid, xlstm_kinds)
+
+Cache = Dict[str, Any]
+
+
+def _kv(n_layers, b, maxlen, g, hd):
+    return {"k": jnp.zeros((n_layers, b, maxlen, g, hd), jnp.bfloat16),
+            "v": jnp.zeros((n_layers, b, maxlen, g, hd), jnp.bfloat16)}
+
+
+def init_cache(cfg: ArchConfig, batch_size: int, max_len: int,
+               enc_out=None, params=None, window: int = 0) -> Cache:
+    """``window > 0``: allocate attention KV as a ring buffer of
+    min(max_len, window) slots (sliding-window decode; H3 in
+    EXPERIMENTS.md S Perf -- the 500k-context memory fix)."""
+    b = batch_size
+    if window:
+        max_len = min(max_len, window)
+    cache: Cache = {"length": jnp.int32(0)}
+    if cfg.family in ("dense", "vlm"):
+        cache["kv"] = _kv(cfg.n_layers, b, max_len, cfg.n_kv_heads,
+                          cfg.head_dim)
+    elif cfg.family == "moe":
+        if cfg.mla:
+            def mla_c(n):
+                return {"ckv": jnp.zeros((n, b, max_len, cfg.kv_lora),
+                                         jnp.bfloat16),
+                        "kr": jnp.zeros((n, b, max_len, cfg.qk_rope),
+                                        jnp.bfloat16)}
+            cache["dense_kv"] = mla_c(cfg.first_dense)
+            cache["moe_kv"] = mla_c(cfg.n_layers - cfg.first_dense)
+        else:
+            cache["dense_kv"] = _kv(cfg.first_dense, b, max_len,
+                                    cfg.n_kv_heads, cfg.head_dim)
+            cache["moe_kv"] = _kv(cfg.n_layers - cfg.first_dense, b,
+                                  max_len, cfg.n_kv_heads, cfg.head_dim)
+    elif cfg.family == "hybrid":
+        d_inner = cfg.mamba_expand * cfg.d_model
+        nh = d_inner // cfg.mamba_head_dim
+        cache["ssm"] = {
+            "state": jnp.zeros((cfg.n_layers, b, nh, cfg.ssm_state,
+                                cfg.mamba_head_dim), jnp.float32),
+            "conv_tail": jnp.zeros((cfg.n_layers, b, 3,
+                                    d_inner + 2 * cfg.ssm_state),
+                                   jnp.bfloat16)}
+        cache["kv"] = _kv(cfg.n_layers, b, max_len, cfg.n_kv_heads,
+                          cfg.head_dim)
+    elif cfg.family == "ssm":
+        blocks = []
+        for kind in xlstm_kinds(cfg):
+            if kind == "slstm":
+                blocks.append({"h": jnp.zeros((b, cfg.d_model), jnp.float32),
+                               "c": jnp.zeros((b, cfg.d_model), jnp.float32),
+                               "n": jnp.ones((b, cfg.d_model), jnp.float32)})
+            else:
+                blocks.append({"state": jnp.zeros(
+                    (b, cfg.n_heads, cfg.head_dim, cfg.head_dim),
+                    jnp.float32)})
+        cache["blocks"] = blocks
+    elif cfg.family == "audio":
+        cache["kv"] = _kv(cfg.n_layers, b, max_len, cfg.n_kv_heads,
+                          cfg.head_dim)
+        # cross-attention k/v precomputed from the encoder output
+        if enc_out is not None and params is not None:
+            def cross(p):
+                k = jnp.einsum("bsd,dhk->bshk", L.cast_c(enc_out),
+                               L.cast_c(p["xattn"]["wk"]),
+                               preferred_element_type=jnp.float32)
+                v = jnp.einsum("bsd,dhk->bshk", L.cast_c(enc_out),
+                               L.cast_c(p["xattn"]["wv"]),
+                               preferred_element_type=jnp.float32)
+                if "bk" in p["xattn"]:
+                    k = k + p["xattn"]["bk"]
+                    v = v + p["xattn"]["bv"]
+                return (k.astype(jnp.bfloat16), v.astype(jnp.bfloat16))
+            ck, cv = jax.vmap(cross)(params["dec_blocks"])
+            cache["cross"] = {"k": ck, "v": cv}
+        else:
+            cache["cross"] = {
+                "k": jnp.zeros((cfg.n_layers, b, cfg.enc_seq,
+                                cfg.n_kv_heads, cfg.head_dim), jnp.bfloat16),
+                "v": jnp.zeros((cfg.n_layers, b, cfg.enc_seq,
+                                cfg.n_kv_heads, cfg.head_dim), jnp.bfloat16)}
+    return cache
+
+
+def decode_step(cfg: ArchConfig, params, cache: Cache, tokens,
+                *, sliding_window: int = 0, scan_unroll: int = 1):
+    """tokens: (B, 1) int32 -> (logits (B,1,V), new_cache)."""
+    na = _norm_apply(cfg)
+    # ring mode is a static property of the cache allocation
+    ring = bool(sliding_window) and "kv" in cache \
+        and cache["kv"]["k"].shape[2] <= sliding_window
+    x = L.embed(params["embed"], tokens)
+    length = cache["length"]
+    positions = length + jnp.arange(1)
+    new_cache: Cache = {"length": length + 1}
+
+    if cfg.family in ("dense", "vlm"):
+        def body(carry, xs):
+            p, k_l, v_l = xs
+            lc = {"attn": {"k": k_l, "v": v_l, "length": length}}
+            y, nc = _apply_attn_block(cfg, p, carry, positions, cache=lc,
+                                      sliding_window=sliding_window,
+                                      ring=ring)
+            return y, (nc["attn"]["k"], nc["attn"]["v"])
+        x, (ks, vs) = jax.lax.scan(
+            body, x, (params["blocks"], cache["kv"]["k"], cache["kv"]["v"]), unroll=scan_unroll)
+        new_cache["kv"] = {"k": ks, "v": vs}
+
+    elif cfg.family == "moe":
+        def mk_local(kv, i=None):
+            if cfg.mla:
+                return {"attn": {"ckv": kv[0], "kr": kv[1],
+                                 "length": length}}
+            return {"attn": {"k": kv[0], "v": kv[1], "length": length}}
+
+        def unpack(nc):
+            a = nc["attn"]
+            if cfg.mla:
+                return (a["ckv"], a["kr"])
+            return (a["k"], a["v"])
+
+        def cache_arrays(c):
+            if cfg.mla:
+                return (c["ckv"], c["kr"])
+            return (c["k"], c["v"])
+
+        def rewrap(arrs):
+            if cfg.mla:
+                return {"ckv": arrs[0], "kr": arrs[1]}
+            return {"k": arrs[0], "v": arrs[1]}
+
+        def dense_body(carry, xs):
+            p, a0, a1 = xs
+            y, nc = _apply_attn_block(cfg, p, carry, positions,
+                                      cache=mk_local((a0, a1)))
+            return y, unpack(nc)
+        x, outs = jax.lax.scan(
+            dense_body, x,
+            (params["dense_blocks"], *cache_arrays(cache["dense_kv"])), unroll=scan_unroll)
+        new_cache["dense_kv"] = rewrap(outs)
+
+        def moe_body(carry, xs):
+            p, a0, a1 = xs
+            y, _, nc = _apply_moe_block(cfg, p, carry, positions,
+                                        cache=mk_local((a0, a1)))
+            return y, unpack(nc)
+        x, outs = jax.lax.scan(
+            moe_body, x,
+            (params["moe_blocks"], *cache_arrays(cache["moe_kv"])), unroll=scan_unroll)
+        new_cache["moe_kv"] = rewrap(outs)
+
+    elif cfg.family == "hybrid":
+        shared = params["shared_attn"]
+        every = cfg.attn_every
+        idxs = jnp.arange(cfg.n_layers)
+
+        def body(carry, xs):
+            idx, p, st, tail, k_l, v_l = xs
+            h = carry
+            h2, nc = S.mamba2_block(
+                p["mamba"], na(p["norm1"], h), d_state=cfg.ssm_state,
+                expand=cfg.mamba_expand, head_dim=cfg.mamba_head_dim,
+                cache={"state": st, "conv_tail": tail})
+            h = h + h2
+
+            def with_attn(args):
+                hh, kk, vv = args
+                lc = {"attn": {"k": kk, "v": vv, "length": length}}
+                y, anc = _apply_attn_block(cfg, shared, hh, positions,
+                                           cache=lc,
+                                           sliding_window=sliding_window,
+                                           ring=ring)
+                return y, anc["attn"]["k"], anc["attn"]["v"]
+            h, k_n, v_n = jax.lax.cond(
+                (idx % every) == every - 1, with_attn,
+                lambda a: a, (h, k_l, v_l))
+            return h, (nc["state"], nc["conv_tail"], k_n, v_n)
+        x, (sts, tails, ks, vs) = jax.lax.scan(
+            body, x, (idxs, params["blocks"], cache["ssm"]["state"],
+                      cache["ssm"]["conv_tail"], cache["kv"]["k"],
+                      cache["kv"]["v"]), unroll=scan_unroll)
+        # mamba2_block state comes back transposed (h, dk, dv) == (h, N, P)
+        new_cache["ssm"] = {"state": sts, "conv_tail": tails}
+        new_cache["kv"] = {"k": ks, "v": vs}
+
+    elif cfg.family == "ssm":
+        new_blocks = []
+        for p, kind, bc in zip(params["blocks_list"], xlstm_kinds(cfg),
+                               cache["blocks"]):
+            h = na(p["norm1"], x)
+            if kind == "slstm":
+                y, nc = S.slstm_block(p["cell"], h, cache=bc)
+            else:
+                y, nc = S.mlstm_block(p["cell"], h, n_heads=cfg.n_heads,
+                                      head_dim=cfg.head_dim, cache=bc)
+            x = x + y
+            new_blocks.append(nc)
+        new_cache["blocks"] = new_blocks
+
+    elif cfg.family == "audio":
+        x = x + _sinusoid(positions, cfg.d_model).astype(x.dtype)
+
+        def body(carry, xs):
+            p, k_l, v_l, xk_l, xv_l = xs
+            lc = {"attn": {"k": k_l, "v": v_l, "length": length}}
+            y, nc = _apply_attn_block(cfg, p, carry, positions, cache=lc,
+                                      enc_kv={"k": xk_l, "v": xv_l})
+            return y, (nc["attn"]["k"], nc["attn"]["v"])
+        x, (ks, vs) = jax.lax.scan(
+            body, x, (params["dec_blocks"], cache["kv"]["k"],
+                      cache["kv"]["v"], cache["cross"]["k"],
+                      cache["cross"]["v"]), unroll=scan_unroll)
+        new_cache["kv"] = {"k": ks, "v": vs}
+        new_cache["cross"] = cache["cross"]
+
+    x = na(params["final_norm"], x)
+    logits = L.unembed(params["embed"], x)
+    return logits, new_cache

@@ -1,0 +1,405 @@
+"""Core transformer layers: norms, RoPE, GQA / MLA attention, gated MLP.
+
+Functional style: every module is an ``init_*`` returning a param pytree and
+an ``apply`` taking (params, activations).  Weight layouts are chosen for
+TP sharding (heads and ffn-hidden as leading shardable axes); see
+train/sharding.py for the partitioning rules.
+
+Compute dtype is bf16 with f32 accumulation (preferred_element_type); params
+are stored f32 and cast on use.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+# ---------------------------------------------------------------------------
+# initializers
+# ---------------------------------------------------------------------------
+
+def _dense_init(key, shape, in_axis_size):
+    scale = 1.0 / jnp.sqrt(jnp.float32(in_axis_size))
+    return (jax.random.normal(key, shape, jnp.float32) * scale)
+
+
+def cast_c(x):
+    """compute-dtype cast"""
+    return x.astype(jnp.bfloat16)
+
+
+# ---------------------------------------------------------------------------
+# norms
+# ---------------------------------------------------------------------------
+
+def init_rmsnorm(d):
+    return {"scale": jnp.ones((d,), jnp.float32)}
+
+
+def rms_norm(params, x, eps=1e-5):
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    y = xf * jax.lax.rsqrt(var + eps) * params["scale"]
+    return y.astype(x.dtype)
+
+
+def init_layernorm(d):
+    return {"scale": jnp.ones((d,), jnp.float32),
+            "bias": jnp.zeros((d,), jnp.float32)}
+
+
+def layer_norm(params, x, eps=1e-5):
+    xf = x.astype(jnp.float32)
+    mu = jnp.mean(xf, axis=-1, keepdims=True)
+    var = jnp.mean((xf - mu) ** 2, axis=-1, keepdims=True)
+    y = (xf - mu) * jax.lax.rsqrt(var + eps) * params["scale"] + params["bias"]
+    return y.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# RoPE (half-split / NeoX convention; ``rotary_frac`` supports chatglm's
+# 2d-RoPE = rotation of only the first half of head_dim)
+# ---------------------------------------------------------------------------
+
+def rope_freqs(head_dim_rot: int, theta: float = 10000.0):
+    inv = 1.0 / (theta ** (jnp.arange(0, head_dim_rot, 2,
+                                      dtype=jnp.float32) / head_dim_rot))
+    return inv  # (head_dim_rot/2,)
+
+
+def apply_rope(x, positions, rotary_frac: float = 1.0,
+               theta: float = 10000.0):
+    """x: (..., S, H, D). positions: broadcastable (..., S)."""
+    d = x.shape[-1]
+    d_rot = int(d * rotary_frac)
+    d_rot -= d_rot % 2
+    if d_rot == 0:
+        return x
+    inv = rope_freqs(d_rot, theta)
+    ang = positions[..., None].astype(jnp.float32) * inv  # (..., S, d_rot/2)
+    cos = jnp.cos(ang)[..., None, :]
+    sin = jnp.sin(ang)[..., None, :]
+    xr, xp = x[..., :d_rot], x[..., d_rot:]
+    x1, x2 = xr[..., : d_rot // 2], xr[..., d_rot // 2:]
+    r1 = x1 * cos - x2 * sin
+    r2 = x2 * cos + x1 * sin
+    return jnp.concatenate([r1.astype(x.dtype), r2.astype(x.dtype), xp],
+                           axis=-1)
+
+
+# ---------------------------------------------------------------------------
+# attention core
+# ---------------------------------------------------------------------------
+
+def sdpa(q, k, v, *, causal: bool, q_offset=0, sliding_window: int = 0,
+         scale: Optional[float] = None, kpos=None):
+    """q: (B, Sq, H, D); k/v: (B, Sk, G, D) with H % G == 0 (GQA).
+
+    ``q_offset`` is the absolute position of q[0] (decode: cache length).
+    ``kpos``: optional (Sk,) absolute positions of the keys -- used by the
+    ring-buffer windowed cache (H3, EXPERIMENTS.md S Perf), where slot j
+    holds a rotating absolute position; negative = empty slot.
+    """
+    b, sq, h, d = q.shape
+    _, sk, g, _ = k.shape
+    rep = h // g
+    scale = scale if scale is not None else 1.0 / (d ** 0.5)
+    qg = q.reshape(b, sq, g, rep, d)
+    logits = jnp.einsum("bqgrd,bkgd->bgrqk", cast_c(qg), cast_c(k),
+                        preferred_element_type=jnp.float32) * scale
+    qpos = q_offset + jnp.arange(sq)[:, None]
+    if kpos is None:
+        kpos = jnp.arange(sk)
+    kpos = kpos[None, :]
+    mask = kpos >= 0
+    if causal:
+        mask = mask & (kpos <= qpos)
+    if sliding_window:
+        mask = mask & (kpos > qpos - sliding_window)
+    logits = jnp.where(mask, logits, -1e30)
+    probs = jax.nn.softmax(logits, axis=-1)
+    out = jnp.einsum("bgrqk,bkgd->bqgrd", cast_c(probs), cast_c(v),
+                     preferred_element_type=jnp.float32)
+    return out.reshape(b, sq, h, d).astype(q.dtype)
+
+
+def sdpa_chunked(q, k, v, *, causal: bool = True, q_offset=0,
+                 sliding_window: int = 0, scale: Optional[float] = None,
+                 q_chunk: int = 2048, kv_chunk: int = 2048):
+    """Flash-style chunked attention: online softmax over KV blocks.
+
+    Never materializes the (Sq, Sk) logits -- peak live memory is one
+    (q_chunk, kv_chunk) tile per head group.  Used automatically by
+    gqa_attention for long sequences (H5, EXPERIMENTS.md S Perf: the fix
+    for prefill_32k cells whose full-softmax logits exceeded HBM).
+    Numerically equivalent to sdpa (same f32 accumulation; online
+    rescaling), validated in tests/test_models.py.
+    """
+    b, sq, h, d = q.shape
+    _, sk, g, _ = k.shape
+    dv = v.shape[-1]  # may differ from d (MLA: k_eff wider than v)
+    rep = h // g
+    scale = scale if scale is not None else 1.0 / (d ** 0.5)
+    q_chunk = min(q_chunk, sq)
+    kv_chunk = min(kv_chunk, sk)
+    assert sq % q_chunk == 0 and sk % kv_chunk == 0
+    nq, nk = sq // q_chunk, sk // kv_chunk
+
+    qg = q.reshape(b, nq, q_chunk, g, rep, d)
+    kc = k.reshape(b, nk, kv_chunk, g, d)
+    vc = v.reshape(b, nk, kv_chunk, g, dv)
+
+    def q_block(qi, q_blk):
+        q_pos = q_offset + qi * q_chunk + jnp.arange(q_chunk)[:, None]
+
+        def kv_step(carry, inp):
+            m_run, l_run, acc = carry
+            ki, k_blk, v_blk = inp
+            logits = jnp.einsum("bqgrd,bkgd->bgrqk", cast_c(q_blk),
+                                cast_c(k_blk),
+                                preferred_element_type=jnp.float32) * scale
+            k_pos = ki * kv_chunk + jnp.arange(kv_chunk)[None, :]
+            mask = jnp.ones((q_chunk, kv_chunk), bool)
+            if causal:
+                mask = mask & (k_pos <= q_pos)
+            if sliding_window:
+                mask = mask & (k_pos > q_pos - sliding_window)
+            logits = jnp.where(mask, logits, -1e30)
+            m_new = jnp.maximum(m_run, logits.max(axis=-1))
+            alpha = jnp.exp(m_run - m_new)
+            p = jnp.exp(logits - m_new[..., None])
+            l_new = l_run * alpha + p.sum(axis=-1)
+            acc = acc * alpha[..., None] + jnp.einsum(
+                "bgrqk,bkgd->bgrqd", p.astype(jnp.bfloat16), cast_c(v_blk),
+                preferred_element_type=jnp.float32)
+            return (m_new, l_new, acc), None
+
+        m0 = jnp.full((b, g, rep, q_chunk), -jnp.inf, jnp.float32)
+        l0 = jnp.zeros((b, g, rep, q_chunk), jnp.float32)
+        a0 = jnp.zeros((b, g, rep, q_chunk, dv), jnp.float32)
+        (m_f, l_f, acc), _ = jax.lax.scan(
+            kv_step, (m0, l0, a0),
+            (jnp.arange(nk), jnp.moveaxis(kc, 1, 0),
+             jnp.moveaxis(vc, 1, 0)))
+        out = acc / jnp.maximum(l_f, 1e-30)[..., None]
+        return out  # (b, g, rep, q_chunk, d)
+
+    outs = jax.lax.map(
+        jax.checkpoint(lambda inp: q_block(inp[0], inp[1])),
+        (jnp.arange(nq), jnp.moveaxis(qg, 1, 0)))
+    # (nq, b, g, rep, q_chunk, d) -> (b, sq, h, d)
+    out = jnp.moveaxis(outs, 0, 3).reshape(b, g, rep, sq, dv)
+    out = jnp.moveaxis(out.reshape(b, h, sq, dv), 1, 2)
+    return out.astype(q.dtype)
+
+
+CHUNKED_ATTN_THRESHOLD = 8192  # use online-softmax attention at/above this
+# (tried 4096 -- refuted: at 4k the chunking scan introduces all-to-alls
+# and q-block saves that outweigh the S^2 saving; see EXPERIMENTS.md H7)
+
+
+# ---------------------------------------------------------------------------
+# GQA attention block
+# ---------------------------------------------------------------------------
+
+def init_gqa(key, d_model, n_heads, n_kv, head_dim, bias: bool = False):
+    ks = jax.random.split(key, 4)
+    p = {
+        "wq": _dense_init(ks[0], (d_model, n_heads, head_dim), d_model),
+        "wk": _dense_init(ks[1], (d_model, n_kv, head_dim), d_model),
+        "wv": _dense_init(ks[2], (d_model, n_kv, head_dim), d_model),
+        "wo": _dense_init(ks[3], (n_heads, head_dim, d_model),
+                          n_heads * head_dim),
+    }
+    if bias:
+        p["bq"] = jnp.zeros((n_heads, head_dim), jnp.float32)
+        p["bk"] = jnp.zeros((n_kv, head_dim), jnp.float32)
+        p["bv"] = jnp.zeros((n_kv, head_dim), jnp.float32)
+    return p
+
+
+def gqa_attention(params, x, *, positions, causal=True, rotary_frac=1.0,
+                  rope_theta=10000.0, sliding_window=0, cache=None,
+                  ring=False):
+    """cache: None (train/prefill) or dict(k, v, length) for decode.
+
+    ``ring=True``: the cache seq dim is a ring buffer of size
+    ``sliding_window`` -- slot = position % window; keys are roped at
+    write time so slots carry absolute positions (H3, EXPERIMENTS.md).
+    Returns (y, new_cache_or_None).
+    """
+    q = jnp.einsum("bsd,dhk->bshk", cast_c(x), cast_c(params["wq"]),
+                   preferred_element_type=jnp.float32).astype(x.dtype)
+    k = jnp.einsum("bsd,dhk->bshk", cast_c(x), cast_c(params["wk"]),
+                   preferred_element_type=jnp.float32).astype(x.dtype)
+    v = jnp.einsum("bsd,dhk->bshk", cast_c(x), cast_c(params["wv"]),
+                   preferred_element_type=jnp.float32).astype(x.dtype)
+    if "bq" in params:
+        q = q + params["bq"].astype(q.dtype)
+        k = k + params["bk"].astype(k.dtype)
+        v = v + params["bv"].astype(v.dtype)
+    q = apply_rope(q, positions, rotary_frac, rope_theta)
+    k = apply_rope(k, positions, rotary_frac, rope_theta)
+
+    new_cache = None
+    q_offset = 0
+    kpos = None
+    if cache is not None:
+        # decode: write this step's k/v at cache['length'] (or its ring slot)
+        idx = cache["length"]
+        w = cache["k"].shape[1]
+        slot = idx % w if ring else idx
+        ck = jax.lax.dynamic_update_slice_in_dim(cache["k"],
+                                                 k.astype(cache["k"].dtype),
+                                                 slot, axis=1)
+        cv = jax.lax.dynamic_update_slice_in_dim(cache["v"],
+                                                 v.astype(cache["v"].dtype),
+                                                 slot, axis=1)
+        k, v = ck, cv
+        q_offset = idx
+        if ring:
+            # slot j holds absolute position idx - ((idx - j) mod w);
+            # not-yet-written slots come out negative => masked
+            j = jnp.arange(w)
+            kpos = idx - ((idx - j) % w)
+        new_cache = {"k": ck, "v": cv, "length": idx + q.shape[1]}
+    if cache is None and q.shape[1] >= CHUNKED_ATTN_THRESHOLD:
+        # long-sequence train/prefill: online-softmax chunked attention
+        # (never materializes the S x S logits -- H5)
+        y = sdpa_chunked(q, k, v, causal=causal,
+                         sliding_window=sliding_window)
+    else:
+        y = sdpa(q, k, v, causal=causal, q_offset=q_offset,
+                 sliding_window=sliding_window, kpos=kpos)
+    out = jnp.einsum("bshk,hkd->bsd", cast_c(y), cast_c(params["wo"]),
+                     preferred_element_type=jnp.float32).astype(x.dtype)
+    return out, new_cache
+
+
+# ---------------------------------------------------------------------------
+# MLA attention (DeepSeek-V2): low-rank KV compression; the decode cache
+# holds only (c_kv, k_rope) -- the technique's memory win.
+# ---------------------------------------------------------------------------
+
+def init_mla(key, d_model, n_heads, kv_lora, qk_nope=128, qk_rope=64,
+             v_dim=128):
+    ks = jax.random.split(key, 6)
+    return {
+        "wq": _dense_init(ks[0], (d_model, n_heads, qk_nope + qk_rope),
+                          d_model),
+        "wdkv": _dense_init(ks[1], (d_model, kv_lora), d_model),
+        "wkr": _dense_init(ks[2], (d_model, qk_rope), d_model),
+        "wuk": _dense_init(ks[3], (kv_lora, n_heads, qk_nope), kv_lora),
+        "wuv": _dense_init(ks[4], (kv_lora, n_heads, v_dim), kv_lora),
+        "wo": _dense_init(ks[5], (n_heads, v_dim, d_model), n_heads * v_dim),
+    }
+
+
+def mla_attention(params, x, *, positions, qk_nope=128, qk_rope=64,
+                  rope_theta=10000.0, cache=None):
+    q = jnp.einsum("bsd,dhk->bshk", cast_c(x), cast_c(params["wq"]),
+                   preferred_element_type=jnp.float32).astype(x.dtype)
+    qn, qr = q[..., :qk_nope], q[..., qk_nope:]
+    qr = apply_rope(qr, positions, 1.0, rope_theta)
+
+    ckv = jnp.einsum("bsd,dr->bsr", cast_c(x), cast_c(params["wdkv"]),
+                     preferred_element_type=jnp.float32).astype(x.dtype)
+    kr = jnp.einsum("bsd,dk->bsk", cast_c(x), cast_c(params["wkr"]),
+                    preferred_element_type=jnp.float32).astype(x.dtype)
+    kr = apply_rope(kr[:, :, None, :], positions, 1.0,
+                    rope_theta)[:, :, 0, :]
+
+    q_offset = 0
+    new_cache = None
+    if cache is not None:
+        idx = cache["length"]
+        ckv = jax.lax.dynamic_update_slice_in_dim(
+            cache["ckv"], ckv.astype(cache["ckv"].dtype), idx, axis=1)
+        kr = jax.lax.dynamic_update_slice_in_dim(
+            cache["kr"], kr.astype(cache["kr"].dtype), idx, axis=1)
+        q_offset = idx
+        new_cache = {"ckv": ckv, "kr": kr, "length": idx + x.shape[1]}
+
+    # expand compressed cache to per-head keys/values
+    kn = jnp.einsum("bsr,rhk->bshk", cast_c(ckv), cast_c(params["wuk"]),
+                    preferred_element_type=jnp.float32).astype(x.dtype)
+    v = jnp.einsum("bsr,rhk->bshk", cast_c(ckv), cast_c(params["wuv"]),
+                   preferred_element_type=jnp.float32).astype(x.dtype)
+
+    b, sq, h, _ = q.shape
+    sk = kn.shape[1]
+    scale = 1.0 / ((qk_nope + qk_rope) ** 0.5)
+    if cache is None and sq >= CHUNKED_ATTN_THRESHOLD:
+        # H5 for MLA: the two-term logits (nope + rope) fold into ONE
+        # effective dot -- q_eff = [qn, qr], k_eff = [kn, kr per head] --
+        # so the flash-style chunked path applies unchanged.
+        q_eff = jnp.concatenate([qn, qr], axis=-1)
+        kr_h = jnp.broadcast_to(kr[:, :, None, :],
+                                (b, sk, h, kr.shape[-1])).astype(kn.dtype)
+        k_eff = jnp.concatenate([kn, kr_h], axis=-1)
+        y = sdpa_chunked(q_eff, k_eff, v, causal=True,
+                         scale=scale).astype(x.dtype)
+    else:
+        logits = (jnp.einsum("bqhn,bkhn->bhqk", cast_c(qn), cast_c(kn),
+                             preferred_element_type=jnp.float32)
+                  + jnp.einsum("bqhr,bkr->bhqk", cast_c(qr), cast_c(kr),
+                               preferred_element_type=jnp.float32)) * scale
+        qpos = q_offset + jnp.arange(sq)[:, None]
+        kpos = jnp.arange(sk)[None, :]
+        logits = jnp.where(kpos <= qpos, logits, -1e30)
+        probs = jax.nn.softmax(logits, axis=-1)
+        y = jnp.einsum("bhqk,bkhd->bqhd", cast_c(probs), cast_c(v),
+                       preferred_element_type=jnp.float32).astype(x.dtype)
+    out = jnp.einsum("bshk,hkd->bsd", cast_c(y), cast_c(params["wo"]),
+                     preferred_element_type=jnp.float32).astype(x.dtype)
+    return out, new_cache
+
+
+# ---------------------------------------------------------------------------
+# gated MLP (SwiGLU) / plain MLP
+# ---------------------------------------------------------------------------
+
+def init_mlp(key, d_model, d_ff, gated: bool = True):
+    ks = jax.random.split(key, 3)
+    p = {"wi": _dense_init(ks[0], (d_model, d_ff), d_model),
+         "wo": _dense_init(ks[1], (d_ff, d_model), d_ff)}
+    if gated:
+        p["wg"] = _dense_init(ks[2], (d_model, d_ff), d_model)
+    return p
+
+
+def mlp(params, x, act=jax.nn.silu):
+    h = jnp.einsum("bsd,df->bsf", cast_c(x), cast_c(params["wi"]),
+                   preferred_element_type=jnp.float32)
+    if "wg" in params:
+        g = jnp.einsum("bsd,df->bsf", cast_c(x), cast_c(params["wg"]),
+                       preferred_element_type=jnp.float32)
+        h = act(g) * h
+    else:
+        h = act(h)
+    return jnp.einsum("bsf,fd->bsd", cast_c(h.astype(x.dtype)),
+                      cast_c(params["wo"]),
+                      preferred_element_type=jnp.float32).astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# embedding / unembedding
+# ---------------------------------------------------------------------------
+
+def init_embed(key, vocab, d_model):
+    return {"table": jax.random.normal(key, (vocab, d_model),
+                                       jnp.float32) * 0.02}
+
+
+def embed(params, tokens):
+    # cast BEFORE the gather: the table is vocab-sharded, so GSPMD
+    # all-gathers it at the lookup -- in bf16 that transfer halves, and
+    # the same bf16 copy is reused by unembed (H2.3, EXPERIMENTS.md S Perf)
+    return jnp.take(cast_c(params["table"]), tokens, axis=0)
+
+
+def unembed(params, x):
+    return jnp.einsum("bsd,vd->bsv", cast_c(x), cast_c(params["table"]),
+                      preferred_element_type=jnp.float32)

@@ -1,0 +1,404 @@
+"""Model assembly: ArchConfig -> init / forward / cache / decode_step.
+
+Families: dense, moe (GQA or MLA), hybrid (Mamba2 + shared attn block),
+ssm (xLSTM), vlm (stub patch-embedding prefix + dense backbone), audio
+(whisper-style encoder-decoder with a stub conv frontend).
+
+Layer stacks are ``lax.scan`` over stacked params (vmap-init), so compile
+time and HLO size are O(1) in depth; each scan body is ``jax.checkpoint``'d
+in training for activation rematerialization.  Decode threads a stacked
+cache pytree through the same scan.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from . import layers as L
+from . import moe as M
+from . import ssm as S
+
+Params = Dict[str, Any]
+
+_ACTS = {"silu": jax.nn.silu, "gelu": jax.nn.gelu}
+
+
+def _norm_init(cfg):
+    return (L.init_rmsnorm if cfg.norm == "rms" else L.init_layernorm)
+
+
+def _norm_apply(cfg):
+    return (L.rms_norm if cfg.norm == "rms" else L.layer_norm)
+
+
+# ---------------------------------------------------------------------------
+# per-kind block init
+# ---------------------------------------------------------------------------
+
+def _init_attn_block(cfg: ArchConfig, key, cross: bool = False) -> Params:
+    ks = jax.random.split(key, 4)
+    p = {"norm1": _norm_init(cfg)(cfg.d_model),
+         "norm2": _norm_init(cfg)(cfg.d_model)}
+    if cfg.mla:
+        p["attn"] = L.init_mla(ks[0], cfg.d_model, cfg.n_heads, cfg.kv_lora,
+                               cfg.qk_nope, cfg.qk_rope, cfg.head_dim)
+    else:
+        p["attn"] = L.init_gqa(ks[0], cfg.d_model, cfg.n_heads,
+                               cfg.n_kv_heads, cfg.head_dim, cfg.attn_bias)
+    if cross:
+        p["norm_x"] = _norm_init(cfg)(cfg.d_model)
+        p["xattn"] = L.init_gqa(ks[2], cfg.d_model, cfg.n_heads,
+                                cfg.n_kv_heads, cfg.head_dim, cfg.attn_bias)
+    if cfg.d_ff:
+        p["mlp"] = L.init_mlp(ks[1], cfg.d_model, cfg.d_ff, cfg.gated_mlp)
+    return p
+
+
+def _init_moe_block(cfg: ArchConfig, key) -> Params:
+    ks = jax.random.split(key, 2)
+    p = {"norm1": _norm_init(cfg)(cfg.d_model),
+         "norm2": _norm_init(cfg)(cfg.d_model)}
+    if cfg.mla:
+        p["attn"] = L.init_mla(ks[0], cfg.d_model, cfg.n_heads, cfg.kv_lora,
+                               cfg.qk_nope, cfg.qk_rope, cfg.head_dim)
+    else:
+        p["attn"] = L.init_gqa(ks[0], cfg.d_model, cfg.n_heads,
+                               cfg.n_kv_heads, cfg.head_dim, cfg.attn_bias)
+    p["moe"] = M.init_moe(ks[1], cfg.d_model, cfg.d_ff_expert, cfg.n_routed,
+                          cfg.n_shared, cfg.top_k)
+    return p
+
+
+def _init_mamba_block(cfg: ArchConfig, key) -> Params:
+    return {"norm1": _norm_init(cfg)(cfg.d_model),
+            "mamba": S.init_mamba2(key, cfg.d_model, cfg.ssm_state,
+                                   cfg.mamba_expand, cfg.mamba_head_dim)}
+
+
+# ---------------------------------------------------------------------------
+# per-kind block apply (cache=None for train/prefill)
+# ---------------------------------------------------------------------------
+
+def _apply_attn_block(cfg, p, x, positions, cache=None, *, causal=True,
+                      sliding_window=0, enc_kv=None, ring=False):
+    na = _norm_apply(cfg)
+    h = na(p["norm1"], x)
+    if cfg.mla:
+        y, new_attn = L.mla_attention(p["attn"], h, positions=positions,
+                                      qk_nope=cfg.qk_nope,
+                                      qk_rope=cfg.qk_rope,
+                                      rope_theta=cfg.rope_theta,
+                                      cache=None if cache is None
+                                      else cache["attn"])
+    else:
+        y, new_attn = L.gqa_attention(
+            p["attn"], h, positions=positions, causal=causal,
+            rotary_frac=cfg.rotary_frac if cfg.use_rope else 0.0,
+            rope_theta=cfg.rope_theta, sliding_window=sliding_window,
+            cache=None if cache is None else cache["attn"], ring=ring)
+    x = x + y
+    new_cache = None if cache is None else {"attn": new_attn}
+    if enc_kv is not None:
+        h = na(p["norm_x"], x)
+        # cross attention against precomputed encoder k/v
+        q = jnp.einsum("bsd,dhk->bshk", L.cast_c(h),
+                       L.cast_c(p["xattn"]["wq"]),
+                       preferred_element_type=jnp.float32).astype(x.dtype)
+        if "bq" in p["xattn"]:
+            q = q + p["xattn"]["bq"].astype(q.dtype)
+        y = L.sdpa(q, enc_kv["k"], enc_kv["v"], causal=False)
+        y = jnp.einsum("bshk,hkd->bsd", L.cast_c(y),
+                       L.cast_c(p["xattn"]["wo"]),
+                       preferred_element_type=jnp.float32).astype(x.dtype)
+        x = x + y
+    if cfg.d_ff and "mlp" in p:
+        x = x + L.mlp(p["mlp"], na(p["norm2"], x), act=_ACTS[cfg.act])
+    return x, new_cache
+
+
+def _apply_moe_block(cfg, p, x, positions, cache=None, dropless=False,
+                     per_sequence=False, shard_axes=None):
+    na = _norm_apply(cfg)
+    h = na(p["norm1"], x)
+    if cfg.mla:
+        y, new_attn = L.mla_attention(p["attn"], h, positions=positions,
+                                      qk_nope=cfg.qk_nope,
+                                      qk_rope=cfg.qk_rope,
+                                      rope_theta=cfg.rope_theta,
+                                      cache=None if cache is None
+                                      else cache["attn"])
+    else:
+        y, new_attn = L.gqa_attention(p["attn"], h, positions=positions,
+                                      causal=True,
+                                      rotary_frac=cfg.rotary_frac,
+                                      rope_theta=cfg.rope_theta,
+                                      cache=None if cache is None
+                                      else cache["attn"])
+    x = x + y
+    # decode uses dropless capacity (cap >= T * top_k): per-step batches
+    # are tiny and token drops would make decode diverge from prefill
+    cf = float(cfg.n_routed) if (cache is not None or dropless) else 1.25
+    y, aux = M.moe_block(p["moe"], na(p["norm2"], x), top_k=cfg.top_k,
+                         capacity_factor=cf,
+                         per_sequence=per_sequence or cache is not None,
+                         shard_axes=shard_axes)
+    x = x + y
+    new_cache = None if cache is None else {"attn": new_attn}
+    return x, aux, new_cache
+
+
+# ---------------------------------------------------------------------------
+# model init
+# ---------------------------------------------------------------------------
+
+def xlstm_kinds(cfg: ArchConfig):
+    """Static block-kind pattern for the ssm family (not stored in params)."""
+    return ["slstm" if cfg.slstm_every and
+            (i % cfg.slstm_every == cfg.slstm_every - 1) else "mlstm"
+            for i in range(cfg.n_layers)]
+
+
+def init_model(cfg: ArchConfig, key) -> Params:
+    keys = jax.random.split(key, 8)
+    params: Params = {"embed": L.init_embed(keys[0], cfg.vocab, cfg.d_model),
+                      "final_norm": _norm_init(cfg)(cfg.d_model)}
+
+    def stack(init_fn, n, key):
+        return jax.vmap(init_fn)(jax.random.split(key, n))
+
+    if cfg.family in ("dense", "vlm"):
+        params["blocks"] = stack(lambda k: _init_attn_block(cfg, k),
+                                 cfg.n_layers, keys[1])
+    elif cfg.family == "moe":
+        params["dense_blocks"] = stack(lambda k: _init_attn_block(cfg, k),
+                                       cfg.first_dense, keys[1])
+        params["moe_blocks"] = stack(lambda k: _init_moe_block(cfg, k),
+                                     cfg.n_layers - cfg.first_dense, keys[2])
+    elif cfg.family == "hybrid":
+        params["blocks"] = stack(lambda k: _init_mamba_block(cfg, k),
+                                 cfg.n_layers, keys[1])
+        params["shared_attn"] = _init_attn_block(cfg, keys[2])
+    elif cfg.family == "ssm":
+        blocks = []
+        for i, kind in enumerate(xlstm_kinds(cfg)):
+            kb = jax.random.fold_in(keys[1], i)
+            if kind == "slstm":
+                blocks.append({"norm1": _norm_init(cfg)(cfg.d_model),
+                               "cell": S.init_slstm(kb, cfg.d_model,
+                                                    cfg.n_heads)})
+            else:
+                blocks.append({"norm1": _norm_init(cfg)(cfg.d_model),
+                               "cell": S.init_mlstm(kb, cfg.d_model,
+                                                    cfg.n_heads,
+                                                    cfg.head_dim)})
+        params["blocks_list"] = blocks
+    elif cfg.family == "audio":
+        params["enc_blocks"] = stack(
+            lambda k: _init_attn_block(cfg, k), cfg.enc_layers, keys[1])
+        params["dec_blocks"] = stack(
+            lambda k: _init_attn_block(cfg, k, cross=True),
+            cfg.n_layers, keys[2])
+        params["enc_norm"] = _norm_init(cfg)(cfg.d_model)
+    else:
+        raise ValueError(cfg.family)
+    return params
+
+
+# ---------------------------------------------------------------------------
+# sinusoidal positions (whisper)
+# ---------------------------------------------------------------------------
+
+def _sinusoid(positions, d_model):
+    half = d_model // 2
+    freqs = jnp.exp(-jnp.arange(half, dtype=jnp.float32)
+                    * (jnp.log(10000.0) / (half - 1)))
+    ang = positions[:, None].astype(jnp.float32) * freqs[None, :]
+    return jnp.concatenate([jnp.sin(ang), jnp.cos(ang)], axis=-1)
+
+
+# ---------------------------------------------------------------------------
+# forward (train / prefill): batch -> logits, aux
+# ---------------------------------------------------------------------------
+
+def forward(cfg: ArchConfig, params: Params, batch: Dict[str, jax.Array],
+            *, remat: bool = True, sliding_window: int = 0,
+            act_sharding=None, dropless_moe: bool = False,
+            remat_policy: str = "none", scan_unroll: int = 1):
+    # scan_unroll: layer-scan unroll factor.  Functionally inert; the
+    # dry-run compiles unroll=1 and unroll=2 to recover per-layer cost
+    # (XLA cost_analysis counts while bodies ONCE -- EXPERIMENTS.md H10).
+    """act_sharding: optional NamedSharding applied to the residual stream
+    at every block boundary -- sequence parallelism (shards S over the
+    model axis) that bounds the remat-scan carry memory (DESIGN.md S5)."""
+    na = _norm_apply(cfg)
+    if remat and remat_policy == "dots":
+        # H4 (EXPERIMENTS.md S Perf): save matmul outputs across the remat
+        # boundary -- trades activation memory for recompute FLOPs on
+        # compute-bound cells (opt-in; default policy saves nothing)
+        ck = functools.partial(
+            jax.checkpoint,
+            policy=jax.checkpoint_policies.dots_with_no_batch_dims_saveable)
+    else:
+        ck = jax.checkpoint if remat else (lambda f: f)
+
+    def cons(h):
+        if act_sharding is not None:
+            return jax.lax.with_sharding_constraint(h, act_sharding)
+        return h
+
+    shard_axes = None
+    if act_sharding is not None:
+        names = tuple(act_sharding.mesh.axis_names)
+        shard_axes = (names[:-1] if len(names[:-1]) > 1 else names[0],
+                      names[-1])
+
+    if cfg.family == "audio":
+        return _forward_audio(cfg, params, batch, remat=remat,
+                              act_sharding=act_sharding,
+                              scan_unroll=scan_unroll)
+
+    tokens = batch["tokens"]
+    x = L.embed(params["embed"], tokens)
+    if cfg.family == "vlm":
+        x = jnp.concatenate([batch["patch_emb"].astype(x.dtype), x], axis=1)
+    s = x.shape[1]
+    positions = jnp.arange(s)
+    aux = jnp.float32(0.0)
+    x = cons(x)
+
+    if cfg.family in ("dense", "vlm"):
+        @ck
+        def body(carry, p):
+            y, _ = _apply_attn_block(cfg, p, carry, positions,
+                                     sliding_window=sliding_window)
+            return cons(y), None
+        x, _ = jax.lax.scan(body, x, params["blocks"], unroll=scan_unroll)
+
+    elif cfg.family == "moe":
+        @ck
+        def dense_body(carry, p):
+            y, _ = _apply_attn_block(cfg, p, carry, positions)
+            return cons(y), None
+        x, _ = jax.lax.scan(dense_body, x, params["dense_blocks"])  # len 1
+
+        @ck
+        def moe_body(carry, p):
+            h, a = carry
+            # inference (remat=False) uses the batch-local dispatch
+            # layout; training keeps the global buffer (H6)
+            y, aux_l, _ = _apply_moe_block(cfg, p, h, positions,
+                                           dropless=dropless_moe,
+                                           per_sequence=not remat,
+                                           shard_axes=shard_axes)
+            return (cons(y), a + aux_l), None
+        (x, aux), _ = jax.lax.scan(moe_body, (x, aux), params["moe_blocks"],
+                                   unroll=scan_unroll)
+
+    elif cfg.family == "hybrid":
+        shared = params["shared_attn"]
+        every = cfg.attn_every
+
+        @ck
+        def body(carry, xs):
+            h = carry
+            idx, p = xs
+            h2, _ = S.mamba2_block(p["mamba"], na(p["norm1"], h),
+                                   d_state=cfg.ssm_state,
+                                   expand=cfg.mamba_expand,
+                                   head_dim=cfg.mamba_head_dim)
+            h = h + h2
+
+            def with_attn(hh):
+                y, _ = _apply_attn_block(cfg, shared, hh, positions,
+                                         sliding_window=sliding_window)
+                return y
+            h = jax.lax.cond((idx % every) == every - 1, with_attn,
+                             lambda hh: hh, h)
+            return cons(h), None
+        idxs = jnp.arange(cfg.n_layers)
+        x, _ = jax.lax.scan(body, x, (idxs, params["blocks"]),
+                            unroll=scan_unroll)
+
+    elif cfg.family == "ssm":
+        for p, kind in zip(params["blocks_list"], xlstm_kinds(cfg)):
+            h = na(p["norm1"], x)
+            if kind == "slstm":
+                y, _ = S.slstm_block(p["cell"], h)
+            else:
+                y, _ = S.mlstm_block(p["cell"], h, n_heads=cfg.n_heads,
+                                     head_dim=cfg.head_dim)
+            x = x + y
+
+    x = na(params["final_norm"], x)
+    logits = L.unembed(params["embed"], x)
+    return logits, aux
+
+
+def encode_audio(cfg, params, frames):
+    """Encoder-only forward (serving: run once, then cached decode)."""
+    na = _norm_apply(cfg)
+    enc = frames.astype(jnp.bfloat16)
+    enc_pos = jnp.arange(enc.shape[1])
+    enc = enc + _sinusoid(enc_pos, cfg.d_model).astype(enc.dtype)
+
+    def enc_body(carry, p):
+        y, _ = _apply_attn_block(cfg, p, carry, enc_pos, causal=False)
+        return y, None
+    enc, _ = jax.lax.scan(enc_body, enc, params["enc_blocks"])
+    return na(params["enc_norm"], enc)
+
+
+def _forward_audio(cfg, params, batch, *, remat=True, act_sharding=None,
+                   scan_unroll=1):
+    def cons(h):
+        if act_sharding is not None:
+            return jax.lax.with_sharding_constraint(h, act_sharding)
+        return h
+
+    """Whisper-style: frames (stub frontend output) -> encoder; tokens ->
+    causal decoder with cross attention."""
+    na = _norm_apply(cfg)
+    ck = jax.checkpoint if remat else (lambda f: f)
+
+    enc = batch["frames"].astype(jnp.bfloat16)
+    enc_pos = jnp.arange(enc.shape[1])
+    enc = enc + _sinusoid(enc_pos, cfg.d_model).astype(enc.dtype)
+
+    @ck
+    def enc_body(carry, p):
+        y, _ = _apply_attn_block(cfg, p, carry, enc_pos, causal=False)
+        return cons(y), None
+    enc, _ = jax.lax.scan(enc_body, enc, params["enc_blocks"],
+                          unroll=scan_unroll)
+    enc = na(params["enc_norm"], enc)
+
+    tokens = batch["tokens"]
+    x = L.embed(params["embed"], tokens)
+    s = x.shape[1]
+    positions = jnp.arange(s)
+    x = x + _sinusoid(positions, cfg.d_model).astype(x.dtype)
+
+    @ck
+    def dec_body(carry, p):
+        # per-layer cross k/v from the shared encoder output
+        k = jnp.einsum("bsd,dhk->bshk", L.cast_c(enc),
+                       L.cast_c(p["xattn"]["wk"]),
+                       preferred_element_type=jnp.float32).astype(x.dtype)
+        v = jnp.einsum("bsd,dhk->bshk", L.cast_c(enc),
+                       L.cast_c(p["xattn"]["wv"]),
+                       preferred_element_type=jnp.float32).astype(x.dtype)
+        if "bk" in p["xattn"]:
+            k = k + p["xattn"]["bk"].astype(k.dtype)
+            v = v + p["xattn"]["bv"].astype(v.dtype)
+        y, _ = _apply_attn_block(cfg, p, carry, positions,
+                                 enc_kv={"k": k, "v": v})
+        return cons(y), None
+    x, _ = jax.lax.scan(dec_body, x, params["dec_blocks"],
+                        unroll=scan_unroll)
+
+    x = na(params["final_norm"], x)
+    return L.unembed(params["embed"], x), jnp.float32(0.0)

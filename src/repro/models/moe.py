@@ -1,0 +1,170 @@
+"""Fine-grained MoE with shared experts (DeepSeekMoE-style).
+
+Capacity-based dispatch: top-k routing, per-expert capacity, scatter into
+a capacity buffer, dense expert GEMMs, gather-combine weighted by router
+gates; dropped tokens skip the routed path (shared experts always apply);
+Switch-style auxiliary load-balance loss.
+
+TWO dispatch layouts (H6, EXPERIMENTS.md S Perf):
+
+* ``per_sequence=False`` (training default): one global (E, C, d) buffer.
+  Best training-backward behaviour under GSPMD on both meshes.
+* ``per_sequence=True`` (inference/prefill): every batch element owns a
+  private (E, C_seq, d) buffer, positions from a per-sequence cumsum, all
+  scatter indices batch-local.  On the multi-pod mesh this cut the
+  forward-only deepseek prefill temps 53.7 -> 11.5 GB/device and the
+  collective term 1.34 -> 0.36 s (the global cumsum serializes across DP
+  shards).  Training with this layout regresses (GSPMD replicates the
+  backward scatter), hence the split -- the same split production
+  inference stacks make.
+
+Expert weights carry E as the leading axis and are sharded over the model
+axis (expert parallelism).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from .layers import _dense_init, cast_c
+
+
+def init_moe(key, d_model, d_ff_expert, n_routed, n_shared, top_k):
+    ks = jax.random.split(key, 7)
+    p = {
+        "router": _dense_init(ks[0], (d_model, n_routed), d_model),
+        "wi": _dense_init(ks[1], (n_routed, d_model, d_ff_expert), d_model),
+        "wg": _dense_init(ks[2], (n_routed, d_model, d_ff_expert), d_model),
+        "wo": _dense_init(ks[3], (n_routed, d_ff_expert, d_model),
+                          d_ff_expert),
+    }
+    if n_shared:
+        d_sh = d_ff_expert * n_shared
+        p["shared_wi"] = _dense_init(ks[4], (d_model, d_sh), d_model)
+        p["shared_wg"] = _dense_init(ks[5], (d_model, d_sh), d_model)
+        p["shared_wo"] = _dense_init(ks[6], (d_sh, d_model), d_sh)
+    return p
+
+
+def _expert_ffn(params, buf3, out_dtype):
+    """(E, C, d) capacity buffer -> expert SwiGLU -> (E, C, d)."""
+    h = jnp.einsum("ecd,edf->ecf", cast_c(buf3), cast_c(params["wi"]),
+                   preferred_element_type=jnp.float32)
+    g = jnp.einsum("ecd,edf->ecf", cast_c(buf3), cast_c(params["wg"]),
+                   preferred_element_type=jnp.float32)
+    h = (jax.nn.silu(g) * h).astype(out_dtype)
+    return jnp.einsum("ecf,efd->ecd", cast_c(h), cast_c(params["wo"]),
+                      preferred_element_type=jnp.float32)
+
+
+def _shared_path(params, xf, out_dtype):
+    sh_h = jnp.einsum("td,df->tf", cast_c(xf), cast_c(params["shared_wi"]),
+                      preferred_element_type=jnp.float32)
+    sh_g = jnp.einsum("td,df->tf", cast_c(xf), cast_c(params["shared_wg"]),
+                      preferred_element_type=jnp.float32)
+    sh = (jax.nn.silu(sh_g) * sh_h).astype(out_dtype)
+    return jnp.einsum("tf,fd->td", cast_c(sh), cast_c(params["shared_wo"]),
+                      preferred_element_type=jnp.float32).astype(out_dtype)
+
+
+def _aux_loss(experts, probs, e):
+    density = jnp.mean(
+        jax.nn.one_hot(experts[..., 0], e, dtype=jnp.float32),
+        axis=tuple(range(experts.ndim - 1)))
+    router_mean = jnp.mean(probs, axis=tuple(range(probs.ndim - 1)))
+    return e * jnp.sum(density * router_mean)
+
+
+def moe_block(params, x, *, top_k: int, capacity_factor: float = 1.25,
+              per_sequence: bool = False, shard_axes=None):
+    """x: (B, S, D). Returns (y, aux_loss).  shard_axes is accepted for
+    API compatibility (constraints were tried and refuted -- H6)."""
+    b, s, d = x.shape
+    e = params["router"].shape[1]
+
+    if per_sequence:
+        return _moe_per_sequence(params, x, top_k=top_k,
+                                 capacity_factor=capacity_factor)
+
+    t = b * s
+    xt = x.reshape(t, d)
+    cap = int((top_k * t * capacity_factor) / e) + 1
+
+    logits = jnp.einsum("td,de->te", xt.astype(jnp.float32),
+                        params["router"])
+    probs = jax.nn.softmax(logits, axis=-1)
+    gates, experts = jax.lax.top_k(probs, top_k)           # (t, k)
+    gates = gates / (gates.sum(-1, keepdims=True) + 1e-9)
+
+    onehot = jax.nn.one_hot(experts, e, dtype=jnp.int32)   # (t, k, e)
+    flat = onehot.reshape(t * top_k, e)
+    pos = jnp.cumsum(flat, axis=0) * flat - 1              # (t*k, e)
+    pos = pos.max(axis=-1).reshape(t, top_k)
+    keep = pos < cap
+
+    eidx = experts.reshape(-1)
+    pidx = jnp.where(keep, pos, cap - 1).reshape(-1)
+    wgt = jnp.where(keep, 1.0, 0.0).reshape(-1)
+
+    buf = jnp.zeros((e, cap, d), xt.dtype)
+    xk = jnp.repeat(xt[:, None, :], top_k, axis=1).reshape(-1, d)
+    buf = buf.at[eidx, pidx].add(xk * wgt[:, None].astype(xt.dtype))
+    # NOTE (H11, EXPERIMENTS.md S Perf): (E, C, d) has no batch dim, so
+    # GSPMD replicates this GEMM across the DP domain in training --
+    # forcing P(model, data, None) via with_sharding_constraint was tried
+    # and refuted (the scatter then goes cross-device: collective term
+    # exploded 6x).  The correct fix is an explicit all-to-all EP
+    # dispatch (listed next lever); the replication cost is reported
+    # honestly in the roofline table.
+
+    out_buf = _expert_ffn(params, buf, x.dtype)
+    gathered = out_buf[eidx, pidx]                         # (t*k, d)
+    gathered = gathered * (gates.reshape(-1) * wgt)[:, None]
+    y = gathered.reshape(t, top_k, d).sum(axis=1).astype(x.dtype)
+
+    if "shared_wi" in params:
+        y = y + _shared_path(params, xt, x.dtype)
+    return y.reshape(b, s, d), _aux_loss(experts, probs, e)
+
+
+def _moe_per_sequence(params, x, *, top_k: int, capacity_factor: float):
+    """Inference dispatch: batch-local capacity buffers (see module doc)."""
+    b, s, d = x.shape
+    e = params["router"].shape[1]
+    cap = int((top_k * s * capacity_factor) / e) + 1
+
+    logits = jnp.einsum("bsd,de->bse", x.astype(jnp.float32),
+                        params["router"])
+    probs = jax.nn.softmax(logits, axis=-1)
+    gates, experts = jax.lax.top_k(probs, top_k)           # (b, s, k)
+    gates = gates / (gates.sum(-1, keepdims=True) + 1e-9)
+
+    onehot = jax.nn.one_hot(experts, e, dtype=jnp.int32)
+    flat = onehot.reshape(b, s * top_k, e)
+    pos = jnp.cumsum(flat, axis=1) * flat - 1              # per sequence
+    pos = pos.max(axis=-1).reshape(b, s, top_k)
+    keep = pos < cap
+
+    eidx = experts.reshape(b, -1)
+    pidx = jnp.where(keep, pos, cap - 1).reshape(b, -1)
+    wgt = jnp.where(keep, 1.0, 0.0).reshape(b, -1)
+    bidx = jnp.broadcast_to(jnp.arange(b)[:, None], eidx.shape)
+
+    xk = jnp.repeat(x[:, :, None, :], top_k, axis=2).reshape(b, -1, d)
+    buf = jnp.zeros((b, e, cap, d), x.dtype)
+    buf = buf.at[bidx, eidx, pidx].add(xk * wgt[..., None].astype(x.dtype))
+
+    buf3 = buf.transpose(1, 0, 2, 3).reshape(e, b * cap, d)
+    out3 = _expert_ffn(params, buf3, x.dtype)
+    out_buf = out3.reshape(e, b, cap, d).transpose(1, 0, 2, 3)
+
+    gathered = out_buf[bidx, eidx, pidx]
+    gathered = gathered * (gates.reshape(b, -1) * wgt)[..., None]
+    y = gathered.reshape(b, s, top_k, d).sum(axis=2).astype(x.dtype)
+
+    if "shared_wi" in params:
+        y = y.reshape(b * s, d) + _shared_path(params, x.reshape(b * s, d),
+                                               x.dtype)
+        y = y.reshape(b, s, d)
+    return y, _aux_loss(experts, probs, e)

@@ -1,0 +1,275 @@
+"""State-space / recurrent blocks: Mamba2 (SSD) and xLSTM (mLSTM + sLSTM).
+
+One chunked linear-attention core serves both Mamba2's SSD recurrence and
+the mLSTM matrix memory:
+
+    S_t = exp(log_a_t) * S_{t-1} + scale_t * (k_t outer v_t)
+    y_t = q_t . S_t
+
+computed chunk-parallel (intra-chunk einsums + a short scan over chunk
+states), which is the TPU-friendly formulation: the intra-chunk terms are
+MXU matmuls, the cross-chunk scan is O(S/chunk) long.  Decode is the O(1)
+single-step recurrence on a cached state -- the reason the `long_500k`
+shape runs for these families (DESIGN.md S4).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .layers import _dense_init, cast_c
+
+
+# ---------------------------------------------------------------------------
+# chunked linear attention core
+# ---------------------------------------------------------------------------
+
+def chunked_linear_attention(q, k, v, log_a, scale, state0=None,
+                             chunk: int = 256):
+    """q,k: (B,S,H,Dk); v: (B,S,H,Dv); log_a, scale: (B,S,H).
+
+    Returns (y: (B,S,H,Dv), final_state: (B,H,Dk,Dv)).
+    """
+    b, s, h, dk = q.shape
+    dv = v.shape[-1]
+    chunk = min(chunk, s)
+    assert s % chunk == 0
+    nc = s // chunk
+
+    def r(x):
+        return x.reshape(b, nc, chunk, *x.shape[2:])
+
+    qc, kc, vc = r(q), r(k), r(v)
+    la, sc = r(log_a), r(scale)
+
+    cum = jnp.cumsum(la, axis=2)                    # (b,nc,L,h)
+    total = cum[:, :, -1]                           # (b,nc,h)
+
+    # intra-chunk: y[i] += sum_{j<=i} exp(cum_i - cum_j) * sc_j * (q_i.k_j) v_j
+    decay_ij = cum[:, :, :, None, :] - cum[:, :, None, :, :]   # (b,nc,i,j,h)
+    ii = jnp.arange(chunk)
+    causal = (ii[:, None] >= ii[None, :])[None, None, :, :, None]
+    w = jnp.where(causal, jnp.exp(decay_ij), 0.0)
+    attn = jnp.einsum("bcihd,bcjhd->bcijh", cast_c(qc), cast_c(kc),
+                      preferred_element_type=jnp.float32)
+    wattn = attn * w * sc[:, :, None, :, :]
+    y_intra = jnp.einsum("bcijh,bcjhv->bcihv", wattn.astype(jnp.bfloat16),
+                         cast_c(vc), preferred_element_type=jnp.float32)
+
+    # per-chunk state contribution: sum_j exp(total - cum_j) sc_j k_j (x) v_j
+    wk = jnp.exp(total[:, :, None, :] - cum) * sc            # (b,nc,L,h)
+    chunk_state = jnp.einsum("bcjh,bcjhd,bcjhv->bchdv",
+                             wk.astype(jnp.bfloat16), cast_c(kc), cast_c(vc),
+                             preferred_element_type=jnp.float32)
+
+    # scan chunk states: s_c = exp(total_c) * s_{c-1} + chunk_state_c
+    if state0 is None:
+        state0 = jnp.zeros((b, h, dk, dv), jnp.float32)
+
+    def step(carry, inp):
+        tot_c, cs_c = inp
+        new = jnp.exp(tot_c)[:, :, None, None] * carry + cs_c
+        return new, carry  # emit the INCOMING state for each chunk
+
+    total_t = jnp.moveaxis(total, 1, 0)              # (nc,b,h)
+    cs_t = jnp.moveaxis(chunk_state, 1, 0)           # (nc,b,h,dk,dv)
+    final, incoming = jax.lax.scan(step, state0.astype(jnp.float32),
+                                   (total_t, cs_t))
+    incoming = jnp.moveaxis(incoming, 0, 1)          # (b,nc,h,dk,dv)
+
+    # inter-chunk: y[i] += exp(cum_i) * q_i . state_in
+    y_inter = jnp.einsum("bcihd,bchdv->bcihv", cast_c(qc),
+                         incoming.astype(jnp.bfloat16),
+                         preferred_element_type=jnp.float32)
+    y_inter = y_inter * jnp.exp(cum)[..., None]
+
+    y = (y_intra + y_inter).reshape(b, s, h, dv)
+    return y, final
+
+
+def linear_attention_step(q, k, v, log_a, scale, state):
+    """Single decode step. q,k: (B,1,H,Dk) etc.; state: (B,H,Dk,Dv)."""
+    a = jnp.exp(log_a[:, 0])[:, :, None, None]               # (b,h,1,1)
+    kv = jnp.einsum("bhd,bhv->bhdv", k[:, 0].astype(jnp.float32),
+                    v[:, 0].astype(jnp.float32))
+    new_state = a * state + scale[:, 0][:, :, None, None] * kv
+    y = jnp.einsum("bhd,bhdv->bhv", q[:, 0].astype(jnp.float32), new_state)
+    return y[:, None].astype(v.dtype), new_state
+
+
+# ---------------------------------------------------------------------------
+# Mamba2 block
+# ---------------------------------------------------------------------------
+
+def init_mamba2(key, d_model, d_state=64, expand=2, head_dim=64,
+                conv_width=4):
+    d_inner = expand * d_model
+    n_heads = d_inner // head_dim
+    ks = jax.random.split(key, 5)
+    return {
+        # projections: z (gate), x, B, C, dt
+        "in_proj": _dense_init(
+            ks[0], (d_model, 2 * d_inner + 2 * d_state + n_heads), d_model),
+        "conv_w": jax.random.normal(ks[1],
+                                    (conv_width, d_inner + 2 * d_state),
+                                    jnp.float32) * 0.1,
+        "a_log": jnp.zeros((n_heads,), jnp.float32),
+        "d_skip": jnp.ones((n_heads,), jnp.float32),
+        "dt_bias": jnp.zeros((n_heads,), jnp.float32),
+        "out_proj": _dense_init(ks[2], (d_inner, d_model), d_inner),
+        "norm_scale": jnp.ones((d_inner,), jnp.float32),
+    }
+
+
+def _causal_conv(x, w, tail=None):
+    """Depthwise causal conv, width W: x (B,S,C), w (W,C).
+
+    tail: (B, W-1, C) previous context for decode; returns (y, new_tail).
+    """
+    width = w.shape[0]
+    if tail is None:
+        tail = jnp.zeros((x.shape[0], width - 1, x.shape[2]), x.dtype)
+    ext = jnp.concatenate([tail, x], axis=1)
+    y = sum(ext[:, i:i + x.shape[1]] * w[i].astype(x.dtype)
+            for i in range(width))
+    new_tail = ext[:, -(width - 1):]
+    return jax.nn.silu(y), new_tail
+
+
+def mamba2_block(params, x, *, d_state=64, expand=2, head_dim=64,
+                 chunk=256, cache=None):
+    """x: (B,S,D). cache: None or {'state','conv_tail'}. -> (y, new_cache)."""
+    d_model = x.shape[-1]
+    d_inner = expand * d_model
+    n_heads = d_inner // head_dim
+    proj = jnp.einsum("bsd,de->bse", cast_c(x), cast_c(params["in_proj"]),
+                      preferred_element_type=jnp.float32).astype(x.dtype)
+    z, xc, bc, cc, dt = jnp.split(
+        proj, [d_inner, 2 * d_inner, 2 * d_inner + d_state,
+               2 * d_inner + 2 * d_state], axis=-1)
+
+    conv_in = jnp.concatenate([xc, bc, cc], axis=-1)
+    conv_tail = cache["conv_tail"] if cache is not None else None
+    conv_out, new_tail = _causal_conv(conv_in, params["conv_w"], conv_tail)
+    xc = conv_out[..., :d_inner]
+    bc = conv_out[..., d_inner:d_inner + d_state]
+    cc = conv_out[..., d_inner + d_state:]
+
+    b, s, _ = x.shape
+    xh = xc.reshape(b, s, n_heads, head_dim)
+    dt = jax.nn.softplus(dt.astype(jnp.float32)
+                         + params["dt_bias"])           # (b,s,h)
+    a = -jnp.exp(params["a_log"])                        # (h,)
+    log_decay = (a * dt)                                 # (b,s,h)
+    kq = jnp.repeat(bc[:, :, None, :], n_heads, axis=2)  # B -> k
+    qq = jnp.repeat(cc[:, :, None, :], n_heads, axis=2)  # C -> q
+
+    if cache is None:
+        y, final = chunked_linear_attention(qq, kq, xh, log_decay, dt,
+                                            chunk=chunk)
+        new_cache = None
+    else:
+        y, final = linear_attention_step(qq, kq, xh, log_decay, dt,
+                                         cache["state"])
+        new_cache = {"state": final, "conv_tail": new_tail}
+    if cache is None:
+        new_cache = None
+    y = y + params["d_skip"][None, None, :, None] * xh.astype(jnp.float32)
+    y = y.reshape(b, s, d_inner)
+    # gated RMS norm
+    yf = y * jax.nn.silu(z.astype(jnp.float32))
+    var = jnp.mean(yf * yf, axis=-1, keepdims=True)
+    yf = yf * jax.lax.rsqrt(var + 1e-5) * params["norm_scale"]
+    out = jnp.einsum("bse,ed->bsd", cast_c(yf.astype(x.dtype)),
+                     cast_c(params["out_proj"]),
+                     preferred_element_type=jnp.float32).astype(x.dtype)
+    if cache is not None:
+        return out, new_cache
+    return out, None
+
+
+# ---------------------------------------------------------------------------
+# xLSTM: mLSTM (matrix memory) and sLSTM (scalar memory) blocks
+# ---------------------------------------------------------------------------
+
+def init_mlstm(key, d_model, n_heads, head_dim):
+    d_inner = n_heads * head_dim
+    ks = jax.random.split(key, 6)
+    return {
+        "wqkv": _dense_init(ks[0], (d_model, 3, n_heads, head_dim), d_model),
+        "wif": _dense_init(ks[1], (d_model, 2, n_heads), d_model),
+        "wo": _dense_init(ks[2], (d_inner, d_model), d_inner),
+        "ogate": _dense_init(ks[3], (d_model, d_inner), d_model),
+    }
+
+
+def mlstm_block(params, x, *, n_heads, head_dim, chunk=256, cache=None):
+    b, s, d = x.shape
+    qkv = jnp.einsum("bsd,dthk->btshk", cast_c(x), cast_c(params["wqkv"]),
+                     preferred_element_type=jnp.float32).astype(x.dtype)
+    q, k, v = qkv[:, 0], qkv[:, 1], qkv[:, 2]
+    k = k / (head_dim ** 0.5)
+    gates = jnp.einsum("bsd,dgh->bgsh", cast_c(x), cast_c(params["wif"]),
+                       preferred_element_type=jnp.float32)
+    i_gate = jnp.exp(-jax.nn.softplus(-gates[:, 0]))      # sigmoid, (b,s,h)
+    log_f = -jax.nn.softplus(-gates[:, 1])                # log sigmoid
+
+    if cache is None:
+        y, final = chunked_linear_attention(q, k, v, log_f, i_gate,
+                                            chunk=chunk)
+        new_cache = None
+    else:
+        y, final = linear_attention_step(q, k, v, log_f, i_gate,
+                                         cache["state"])
+        new_cache = {"state": final}
+    og = jax.nn.sigmoid(jnp.einsum("bsd,de->bse", cast_c(x),
+                                   cast_c(params["ogate"]),
+                                   preferred_element_type=jnp.float32))
+    y = y.reshape(b, s, n_heads * head_dim) * og
+    out = jnp.einsum("bse,ed->bsd", cast_c(y.astype(x.dtype)),
+                     cast_c(params["wo"]),
+                     preferred_element_type=jnp.float32).astype(x.dtype)
+    return out, new_cache
+
+
+def init_slstm(key, d_model, n_heads):
+    ks = jax.random.split(key, 2)
+    return {
+        # gates: i, f, z, o
+        "wx": _dense_init(ks[0], (d_model, 4, d_model), d_model),
+        "wh": _dense_init(ks[1], (d_model, 4, d_model), d_model) * 0.1,
+    }
+
+
+def slstm_block(params, x, *, cache=None):
+    """Scalar-memory LSTM with exponential gating; lax.scan over time."""
+    b, s, d = x.shape
+    wx = jnp.einsum("bsd,dge->bsge", cast_c(x), cast_c(params["wx"]),
+                    preferred_element_type=jnp.float32)
+
+    if cache is None:
+        h0 = jnp.zeros((b, d), jnp.float32)
+        c0 = jnp.zeros((b, d), jnp.float32)
+        n0 = jnp.ones((b, d), jnp.float32)
+    else:
+        h0, c0, n0 = cache["h"], cache["c"], cache["n"]
+
+    wh = params["wh"].astype(jnp.float32)
+
+    def step(carry, wx_t):
+        h, c, n = carry
+        g = wx_t + jnp.einsum("bd,dge->bge", h, wh)
+        i = jnp.exp(jnp.clip(g[:, 0], -10.0, 10.0))
+        f = jax.nn.sigmoid(g[:, 1])
+        z = jnp.tanh(g[:, 2])
+        o = jax.nn.sigmoid(g[:, 3])
+        c = f * c + i * z
+        n = f * n + i
+        h = o * c / jnp.maximum(jnp.abs(n), 1.0)
+        return (h, c, n), h
+
+    (h, c, n), ys = jax.lax.scan(step, (h0, c0, n0),
+                                 jnp.moveaxis(wx, 1, 0))
+    y = jnp.moveaxis(ys, 0, 1).astype(x.dtype)
+    new_cache = {"h": h, "c": c, "n": n} if cache is not None else None
+    return y, new_cache

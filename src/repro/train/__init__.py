@@ -1,0 +1,3 @@
+from .optim import OptConfig, init as opt_init, update as opt_update  # noqa: F401
+from .step import (cross_entropy, make_loss_fn, make_prefill_step,  # noqa: F401
+                   make_serve_step, make_train_step)

@@ -1,0 +1,186 @@
+"""Sharding rules: param/batch/cache pytrees -> PartitionSpecs.
+
+Parallelism (DESIGN.md S5):
+* data parallel over ``(pod, data)`` (all mesh axes but the last),
+* tensor parallel over ``model`` (heads / ffn-hidden / vocab / experts),
+* expert parallel: MoE expert axis on ``model``,
+* sequence parallel: activation constraints between blocks (train step),
+* optional FSDP: weight d_model axes additionally sharded over the DP axes.
+
+Rules are name-based with a divisibility guard: an axis is only sharded
+when its size divides the mesh axis product (e.g. whisper's 20 heads and
+51866 vocab fall back to replicated on a 16-wide model axis).
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ArchConfig
+
+
+def mesh_axes(mesh) -> Tuple[Tuple[str, ...], Tuple[str, ...]]:
+    """(dp_axes, tp_axes): all-but-last vs last mesh axis."""
+    names = tuple(mesh.axis_names)
+    return names[:-1], names[-1:]
+
+
+def _size(mesh, axes) -> int:
+    n = 1
+    for a in axes:
+        n *= mesh.shape[a]
+    return n
+
+
+def _path_str(path) -> str:
+    parts = []
+    for k in path:
+        if hasattr(k, "key"):
+            parts.append(str(k.key))
+        elif hasattr(k, "idx"):
+            parts.append(str(k.idx))
+    return "/".join(parts)
+
+
+# (substring, spec template) -- axis entries: "tp" / "dp" / None; the
+# template is positional over the trailing dims of the (possibly stacked)
+# weight; a leading layer-stack dim is always None.
+_RULES = [
+    ("embed/table", ("tp", "dp_fsdp")),
+    # heads on tp; if the head count doesn't divide the model axis
+    # (phi4: 24, whisper: 20), fall back to sharding head_dim (H7)
+    ("attn/wq", ("dp_fsdp", "tp|alt", "alt")),
+    ("attn/wk", ("dp_fsdp", "tp|alt", "alt")),
+    ("attn/wv", ("dp_fsdp", "tp|alt", "alt")),
+    ("attn/wo", ("tp|alt", "alt", "dp_fsdp")),
+    ("attn/wdkv", ("dp_fsdp", None)),
+    ("attn/wkr", ("dp_fsdp", None)),
+    ("attn/wuk", (None, "tp", None)),
+    ("attn/wuv", (None, "tp", None)),
+    ("xattn/wq", ("dp_fsdp", "tp|alt", "alt")),
+    ("xattn/wk", ("dp_fsdp", "tp|alt", "alt")),
+    ("xattn/wv", ("dp_fsdp", "tp|alt", "alt")),
+    ("xattn/wo", ("tp|alt", "alt", "dp_fsdp")),
+    ("mlp/wi", ("dp_fsdp", "tp")),
+    ("mlp/wg", ("dp_fsdp", "tp")),
+    ("mlp/wo", ("tp", "dp_fsdp")),
+    ("moe/router", (None, None)),
+    ("moe/wi", ("tp", "dp_fsdp", None)),     # expert parallel
+    ("moe/wg", ("tp", "dp_fsdp", None)),
+    ("moe/wo", ("tp", "dp_fsdp", None)),
+    ("moe/shared_wi", ("dp_fsdp", "tp")),
+    ("moe/shared_wg", ("dp_fsdp", "tp")),
+    ("moe/shared_wo", ("tp", "dp_fsdp")),
+    ("mamba/in_proj", ("dp_fsdp", "tp")),
+    ("mamba/out_proj", ("tp", "dp_fsdp")),
+    ("cell/wqkv", ("dp_fsdp", None, None, "tp")),
+    ("cell/ogate", ("dp_fsdp", "tp")),
+    ("cell/wo", ("tp", "dp_fsdp")),
+    ("cell/wx", ("dp_fsdp", None, "tp")),
+    ("cell/wh", ("dp_fsdp", None, "tp")),
+]
+
+
+def param_spec(path_str: str, shape, mesh, *, fsdp: bool) -> P:
+    dp_axes, tp_axes = mesh_axes(mesh)
+    tp = _size(mesh, tp_axes)
+    dp = _size(mesh, dp_axes)
+    for pat, template in _RULES:
+        if pat in path_str:
+            nt = len(template)
+            lead = len(shape) - nt
+            if lead < 0:
+                return P()
+            entries = [None] * lead
+            dims = shape[lead:]
+            tp_entry = tp_axes if len(tp_axes) > 1 else tp_axes[0]
+            # 'tp|alt' shards on tp when divisible; otherwise the 'alt'
+            # position (head_dim) takes the model axis instead
+            primary_ok = any(isinstance(r, str) and r.startswith("tp")
+                             and d % tp == 0
+                             for d, r in zip(dims, template))
+            for dim, role in zip(dims, template):
+                role = role or ""
+                if role.startswith("tp") and dim % tp == 0:
+                    entries.append(tp_entry)
+                elif role == "alt" and not primary_ok and dim % tp == 0:
+                    entries.append(tp_entry)
+                elif role == "dp_fsdp" and fsdp and dim % dp == 0:
+                    entries.append(dp_axes if len(dp_axes) > 1
+                                   else dp_axes[0])
+                else:
+                    entries.append(None)
+            return P(*entries)
+    return P()  # norms, scalars, biases: replicated
+
+
+def param_shardings(cfg: ArchConfig, params, mesh, *, fsdp: bool = False):
+    """Pytree of NamedShardings matching ``params``."""
+    def f(path, leaf):
+        spec = param_spec(_path_str(path), leaf.shape, mesh, fsdp=fsdp)
+        return NamedSharding(mesh, spec)
+    return jax.tree_util.tree_map_with_path(f, params)
+
+
+def batch_specs(cfg: ArchConfig, mesh, *, global_batch: int):
+    """PartitionSpecs for a training batch dict."""
+    dp_axes, _ = mesh_axes(mesh)
+    dp = _size(mesh, dp_axes)
+    bspec = dp_axes if global_batch % dp == 0 else None
+    b = bspec if bspec is None else (dp_axes if len(dp_axes) > 1
+                                     else dp_axes[0])
+    specs = {"tokens": P(b, None), "labels": P(b, None)}
+    if cfg.family == "vlm":
+        specs["patch_emb"] = P(b, None, None)
+    if cfg.family == "audio":
+        specs["frames"] = P(b, None, None)
+    return specs
+
+
+def cache_specs(cfg: ArchConfig, cache, mesh, *, batch: int):
+    """PartitionSpecs for a decode cache pytree: batch on DP axes when it
+    divides, heads/state channels on the model axis when they divide."""
+    dp_axes, tp_axes = mesh_axes(mesh)
+    dp = _size(mesh, dp_axes)
+    tp = _size(mesh, tp_axes)
+    bax = (dp_axes if len(dp_axes) > 1 else dp_axes[0]) \
+        if batch % dp == 0 else None
+    tax = tp_axes if len(tp_axes) > 1 else tp_axes[0]
+
+    def f(leaf):
+        shape = leaf.shape
+        if leaf.ndim == 0:
+            return P()
+        entries = [None] * leaf.ndim
+        # find the batch dim: first dim equal to batch (after optional
+        # layer-stack leading dim)
+        for i, d in enumerate(shape[:2]):
+            if d == batch:
+                entries[i] = bax
+                bidx = i
+                break
+        else:
+            bidx = -1
+        # shard the first post-batch dim divisible by tp (heads/channels),
+        # skipping sequence-length dims (they must stay whole for decode
+        # writes) -- heuristically: dims >= 4096 are sequence dims.
+        for i in range(bidx + 1, leaf.ndim):
+            d = shape[i]
+            if d >= 4096:
+                continue
+            if d % tp == 0 and d > 1 and entries[i] is None:
+                entries[i] = tax
+                break
+        return P(*entries)
+
+    return jax.tree_util.tree_map(f, cache)
+
+
+def activation_spec(mesh, *, sp: bool = False) -> P:
+    """(B, S, D) activation constraint between blocks (SP shards S)."""
+    dp_axes, tp_axes = mesh_axes(mesh)
+    b = dp_axes if len(dp_axes) > 1 else dp_axes[0]
+    s = (tp_axes if len(tp_axes) > 1 else tp_axes[0]) if sp else None
+    return P(b, s, None)

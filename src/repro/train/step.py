@@ -1,0 +1,136 @@
+"""train_step / serve_step builders with full sharding annotations.
+
+``make_train_step`` returns a jit-able ``(params, opt_state, batch) ->
+(params, opt_state, metrics)`` with in/out shardings derived from
+train/sharding.py; ``make_serve_step`` returns the KV-cached greedy decode
+step.  Both are what launch/dryrun.py lowers for every (arch x shape x
+mesh) cell and what launch/train.py executes.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.models import decode_step, forward
+from . import optim
+from .sharding import activation_spec
+
+
+def cross_entropy(logits, labels):
+    """Stable CE in f32; logits (B,S,V), labels (B,S) int32.
+
+    The gold logit is extracted with an iota-mask reduction instead of
+    take_along_axis: a gather along a vocab-sharded axis makes GSPMD
+    all-gather the full logits (~1.5 GB/step for 92k vocab), while the
+    masked reduce partitions cleanly and only psums a (B,S) scalar field
+    (H2.2, EXPERIMENTS.md S Perf)."""
+    logits = logits.astype(jnp.float32)
+    m = jax.lax.stop_gradient(logits.max(axis=-1, keepdims=True))
+    shifted = logits - m
+    lse = jnp.log(jnp.sum(jnp.exp(shifted), axis=-1))
+    vocab_iota = jax.lax.broadcasted_iota(jnp.int32, logits.shape,
+                                          logits.ndim - 1)
+    gold_mask = vocab_iota == labels[..., None]
+    gold = jnp.sum(jnp.where(gold_mask, shifted, 0.0), axis=-1)
+    return (lse - gold).mean()
+
+
+def make_loss_fn(cfg: ArchConfig, *, remat: bool = True,
+                 sliding_window: int = 0, aux_weight: float = 0.01,
+                 mesh=None, sp: bool = False):
+    def loss_fn(params, batch):
+        logits, aux = forward(cfg, params, batch, remat=remat,
+                              sliding_window=sliding_window)
+        if mesh is not None:
+            logits = jax.lax.with_sharding_constraint(
+                logits, jax.sharding.NamedSharding(
+                    mesh, activation_spec(mesh, sp=False)))
+        loss = cross_entropy(logits, batch["labels"])
+        return loss + aux_weight * aux, (loss, aux)
+    return loss_fn
+
+
+def make_train_step(cfg: ArchConfig, opt_cfg: optim.OptConfig, *,
+                    remat: bool = True, sliding_window: int = 0,
+                    mesh=None, sp: bool = False, grad_sync=None,
+                    microbatches: int = 1, loss_fn=None):
+    """grad_sync: optional fn(grads) for custom (e.g. compressed) DP sync;
+    default None lets pjit/XLA insert the gradient all-reduce.
+
+    microbatches > 1: gradient accumulation -- the batch is split along
+    its leading axis and scanned, so live activation memory scales with
+    the microbatch (H9, EXPERIMENTS.md S Perf: the HBM-fit lever for the
+    large train_4k cells).  Equal-sized microbatches of a mean loss make
+    the accumulated gradient bit-comparable to the full-batch one
+    (tested in tests/test_train.py).
+    """
+    if loss_fn is None:
+        loss_fn = make_loss_fn(cfg, remat=remat,
+                               sliding_window=sliding_window,
+                               mesh=mesh, sp=sp)
+    gfn = jax.value_and_grad(loss_fn, has_aux=True)
+
+    def train_step(params, opt_state, batch):
+        if microbatches > 1:
+            mb_batch = jax.tree.map(
+                lambda a: a.reshape(microbatches,
+                                    a.shape[0] // microbatches,
+                                    *a.shape[1:]), batch)
+
+            def micro(carry, mb):
+                g_acc, tot_a, loss_a, aux_a = carry
+                (tot, (loss, aux)), g = gfn(params, mb)
+                g_acc = jax.tree.map(
+                    lambda a, b: a + b.astype(jnp.float32), g_acc, g)
+                return (g_acc, tot_a + tot, loss_a + loss,
+                        aux_a + aux), None
+
+            g0 = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32),
+                              params)
+            (grads, tot, loss, aux), _ = jax.lax.scan(
+                micro, (g0, 0.0, 0.0, 0.0), mb_batch)
+            inv = 1.0 / microbatches
+            grads = jax.tree.map(lambda g: g * inv, grads)
+            tot, loss, aux = tot * inv, loss * inv, aux * inv
+        else:
+            (tot, (loss, aux)), grads = gfn(params, batch)
+        if grad_sync is not None:
+            grads = grad_sync(grads)
+        new_params, new_opt, om = optim.update(opt_cfg, grads, params,
+                                               opt_state)
+        metrics = {"loss": loss, "aux": aux, "total": tot, **om}
+        return new_params, new_opt, metrics
+
+    return train_step
+
+
+def make_prefill_step(cfg: ArchConfig, *, sliding_window: int = 0):
+    """Forward-only prefill (the prefill_32k shape): batch -> logits."""
+    def prefill(params, batch):
+        logits, _ = forward(cfg, params, batch, remat=False,
+                            sliding_window=sliding_window)
+        return logits
+    return prefill
+
+
+def make_serve_step(cfg: ArchConfig, *, sliding_window: int = 0,
+                    temperature: float = 0.0):
+    """One decode iteration: (params, cache, tokens (B,1)) ->
+    (next_tokens (B,1), new_cache)."""
+    def serve_step(params, cache, tokens):
+        logits, new_cache = decode_step(cfg, params, cache, tokens,
+                                        sliding_window=sliding_window)
+        if temperature > 0.0:
+            # deterministic skip-ahead sampling keyed on cache length
+            key = jax.random.fold_in(jax.random.PRNGKey(0),
+                                     cache["length"])
+            nxt = jax.random.categorical(
+                key, logits[:, -1] / temperature)[:, None]
+        else:
+            nxt = jnp.argmax(logits[:, -1], axis=-1)[:, None]
+        return nxt.astype(tokens.dtype), new_cache
+    return serve_step

@@ -1,0 +1,120 @@
+"""Ising engine correctness: cross-engine agreement + physics validation."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import lattice as lat
+from repro.core import metropolis as metro
+from repro.core import multispin as ms
+from repro.core import observables as obs
+from repro.core import tensorcore as tc
+from repro.core.sim import SimConfig, Simulation
+
+
+def _direct_nn(full, i, j):
+    n, m = full.shape
+    return (full[(i - 1) % n, j] + full[(i + 1) % n, j]
+            + full[i, (j - 1) % m] + full[i, (j + 1) % m])
+
+
+@pytest.mark.parametrize("n,m", [(8, 8), (16, 32), (12, 24)])
+def test_neighbor_sums_basic_vs_direct(n, m):
+    full = lat.init_lattice(jax.random.PRNGKey(0), n, m)
+    b, w = lat.split_checkerboard(full)
+    nn_b = np.asarray(metro.neighbor_sums(w, is_black=True))
+    fn = np.asarray(full, np.int32)
+    for i in range(n):
+        for k in range(m // 2):
+            j = 2 * k + i % 2
+            assert nn_b[i, k] == _direct_nn(fn, i, j), (i, k)
+
+
+def test_packed_sums_match_basic():
+    full = lat.init_lattice(jax.random.PRNGKey(1), 16, 32)
+    b, w = lat.split_checkerboard(full)
+    bw, ww = ms.pack_lattice(b, w)
+    nn_basic = metro.neighbor_sums(w, is_black=True)      # in +-1 units
+    nn_pack = lat.unpack_nibbles(lat.packed_neighbor_sums(ww, True))
+    assert (nn_basic == 2 * nn_pack.astype(jnp.int32) - 4).all()
+
+
+def test_tensorcore_sums_exact():
+    full = lat.init_lattice(jax.random.PRNGKey(2), 16, 16)
+    nn = tc.neighbor_sums_tc(tc.decompose(full), block=4)
+    fn = np.asarray(full, np.int32)
+    for a in range(8):
+        for b in range(8):
+            assert int(nn["00"][a, b]) == _direct_nn(fn, 2 * a, 2 * b)
+            assert int(nn["11"][a, b]) == _direct_nn(fn, 2 * a + 1,
+                                                     2 * b + 1)
+
+
+def test_kernel_matrix_banded():
+    k = np.asarray(tc.make_kernel_matrix(8), np.float32)
+    assert (np.diag(k) == 1).all() and (np.diag(k, 1) == 1).all()
+    assert k.sum() == 8 + 7
+
+
+def test_acceptance_table_values():
+    beta = 0.5
+    table = np.asarray(ms.acceptance_table(jnp.float32(beta)))
+    for s in range(2):
+        for nn in range(5):
+            expect = np.exp(-2 * beta * (2 * s - 1) * (2 * nn - 4))
+            np.testing.assert_allclose(table[s * 5 + nn], expect,
+                                       rtol=1e-5)
+
+
+@pytest.mark.parametrize("engine", ["basic", "basic_philox", "multispin",
+                                    "tensorcore"])
+def test_low_temperature_orders(engine):
+    """T=1.5 < Tc: |m| must approach Onsager's 0.9865 on every engine."""
+    sim = Simulation(SimConfig(n=64, m=64, temperature=1.5, seed=3,
+                               engine=engine, tc_block=8))
+    sim.run(300)
+    m = abs(sim.magnetization())
+    assert m > 0.93, (engine, m)
+
+
+@pytest.mark.parametrize("engine", ["basic_philox", "multispin"])
+def test_high_temperature_disorders(engine):
+    """T=5 >> Tc: |m| ~ 0."""
+    sim = Simulation(SimConfig(n=64, m=64, temperature=5.0, seed=4,
+                               engine=engine))
+    sim.run(200)
+    assert abs(sim.magnetization()) < 0.1
+
+
+def test_energy_ground_state():
+    """All-up lattice: E/spin = -2 (each spin has 4 aligned bonds / 2)."""
+    full = jnp.ones((16, 16), jnp.int8)
+    b, w = lat.split_checkerboard(full)
+    assert float(obs.energy_per_spin(b, w)) == -2.0
+
+
+def test_onsager_curve():
+    assert float(obs.onsager_magnetization(1.5)) == pytest.approx(0.9865,
+                                                                  abs=1e-3)
+    assert float(obs.onsager_magnetization(3.0)) == 0.0
+    assert float(obs.onsager_magnetization(obs.T_CRITICAL + 1e-4)) == 0.0
+
+
+def test_binder_limits():
+    m_const = jnp.ones(100) * 0.8
+    assert float(obs.binder_cumulant(m_const)) == pytest.approx(2.0 / 3.0)
+
+
+def test_checkpoint_restart_bitexact(tmp_path):
+    """Philox skip-ahead: save at 10 sweeps + 10 more == straight 20."""
+    for engine in ("basic_philox", "multispin"):
+        a = Simulation(SimConfig(n=32, m=32, temperature=2.2, seed=7,
+                                 engine=engine))
+        a.run(10)
+        p = str(tmp_path / f"{engine}.npz")
+        a.save(p)
+        a.run(10)
+        b = Simulation.restore(p)
+        b.run(10)
+        assert (np.asarray(a.full_lattice())
+                == np.asarray(b.full_lattice())).all(), engine

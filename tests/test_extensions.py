@@ -1,0 +1,67 @@
+"""Optional-algorithm extensions: Heat Bath rule, Wolff cluster updates."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import lattice as lat
+from repro.core import metropolis as metro
+from repro.core import observables as obs
+from repro.core.wolff import run_wolff, wolff_step
+
+
+def test_heatbath_acceptance_is_sigmoid():
+    full = jnp.ones((8, 8), jnp.int8)
+    b, w = lat.split_checkerboard(full)
+    # all-up lattice, nn=+4, sigma=+1 -> p_flip = sigmoid(-8 beta)
+    u = jnp.full(b.shape, 0.5)
+    beta = 0.5
+    out = metro.update_color(b, w, u, jnp.float32(beta), True,
+                             rule="heatbath")
+    p = float(jax.nn.sigmoid(jnp.float32(-8 * beta)))
+    assert p < 0.5  # no flips at u=0.5
+    assert (np.asarray(out) == 1).all()
+
+
+def test_heatbath_converges_to_onsager():
+    key = jax.random.PRNGKey(0)
+    full = jnp.ones((48, 48), jnp.int8)
+    b, w = lat.split_checkerboard(full)
+    beta = jnp.float32(1 / 1.8)
+    for i in range(150):
+        key, kb, kw = jax.random.split(key, 3)
+        b = metro.update_color(b, w, jax.random.uniform(kb, b.shape),
+                               beta, True, rule="heatbath")
+        w = metro.update_color(w, b, jax.random.uniform(kw, w.shape),
+                               beta, False, rule="heatbath")
+    m = abs(float(obs.magnetization(b, w)))
+    assert abs(m - float(obs.onsager_magnetization(1.8))) < 0.05
+
+
+def test_wolff_cluster_properties():
+    key = jax.random.PRNGKey(1)
+    full = lat.init_lattice(key, 16, 16)
+    new, size = wolff_step(jax.random.fold_in(key, 1), full, 2.0)
+    assert 1 <= int(size) <= 16 * 16
+    diff = np.asarray(new) != np.asarray(full)
+    assert diff.sum() == int(size)           # exactly the cluster flipped
+    # all flipped sites had the same original spin
+    assert len(set(np.asarray(full)[diff].tolist())) == 1
+
+
+def test_wolff_cluster_size_grows_at_low_temperature():
+    key = jax.random.PRNGKey(2)
+    full = jnp.ones((24, 24), jnp.int8)
+    _, size_cold = run_wolff(key, full, 1.0, 20)
+    _, size_hot = run_wolff(key, full, 10.0, 20)
+    assert float(size_cold) > 10 * float(size_hot)
+
+
+def test_wolff_preserves_equilibrium():
+    """Wolff at T=1.8 keeps an ordered lattice at the Onsager value."""
+    key = jax.random.PRNGKey(3)
+    full = jnp.ones((32, 32), jnp.int8)
+    out, _ = run_wolff(key, full, 1.8, 60)
+    m = abs(float(out.astype(jnp.float32).mean()))
+    # Wolff flips whole clusters: |m| stays at the spontaneous value
+    assert m > 0.80

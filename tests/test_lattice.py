@@ -1,0 +1,62 @@
+"""Checkerboard (de)composition and multi-spin packing properties."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core import lattice as lat
+
+dims = st.tuples(st.integers(1, 8).map(lambda x: 2 * x),
+                 st.integers(1, 8).map(lambda x: 16 * x))
+
+
+@given(dims=dims, seed=st.integers(0, 2**31 - 1))
+@settings(max_examples=25, deadline=None)
+def test_checkerboard_roundtrip(dims, seed):
+    n, m = dims
+    full = lat.init_lattice(jax.random.PRNGKey(seed), n, m)
+    b, w = lat.split_checkerboard(full)
+    assert (lat.merge_checkerboard(b, w) == full).all()
+
+
+def test_checkerboard_coloring_convention():
+    full = jnp.arange(4 * 4).reshape(4, 4).astype(jnp.int8)
+    b, w = lat.split_checkerboard(full)
+    # black[i,k] = full[i, 2k + i%2]  ((i+j) even)
+    expect_b = np.array([[0, 2], [5, 7], [8, 10], [13, 15]])
+    assert (np.asarray(b) == expect_b).all()
+
+
+@given(dims=dims, seed=st.integers(0, 2**31 - 1))
+@settings(max_examples=25, deadline=None)
+def test_pack_unpack_roundtrip(dims, seed):
+    n, m = dims
+    plane = (jax.random.uniform(jax.random.PRNGKey(seed), (n, m))
+             < 0.5).astype(jnp.uint32)
+    assert (lat.unpack_nibbles(lat.pack_nibbles(plane)) == plane).all()
+
+
+@given(dims=dims, seed=st.integers(0, 2**31 - 1),
+       is_black=st.booleans())
+@settings(max_examples=25, deadline=None)
+def test_packed_sums_equal_unpacked(dims, seed, is_black):
+    """Nibble-parallel neighbor sums == per-spin sums (paper S3.3 claim)."""
+    n, m = dims
+    plane01 = (jax.random.uniform(jax.random.PRNGKey(seed), (n, m))
+               < 0.5).astype(jnp.uint32)
+    words = lat.pack_nibbles(plane01)
+    packed = lat.unpack_nibbles(lat.packed_neighbor_sums(words, is_black))
+    up = jnp.roll(plane01, 1, 0)
+    down = jnp.roll(plane01, -1, 0)
+    side = lat.side_shift(plane01, is_black)
+    assert (packed == up + down + plane01 + side).all()
+
+
+def test_side_shift_parity():
+    plane = jnp.arange(4 * 4, dtype=jnp.int32).reshape(4, 4)
+    s_b = lat.side_shift(plane, is_black=True)
+    # even rows: k-1 (roll +1); odd rows: k+1 (roll -1)
+    assert (np.asarray(s_b)[0] == np.roll(np.arange(4), 1)).all()
+    assert (np.asarray(s_b)[1] == np.roll(np.arange(4, 8), -1)).all()
+    s_w = lat.side_shift(plane, is_black=False)
+    assert (np.asarray(s_w)[0] == np.roll(np.arange(4), -1)).all()

@@ -1,0 +1,109 @@
+"""Sharding rules: divisibility fallbacks, spec shapes, roofline parsing."""
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.configs import get_config, get_smoke_config
+from repro.launch import roofline
+from repro.launch.mesh import make_debug_mesh
+from repro.models import init_model
+from repro.train.sharding import (batch_specs, cache_specs, mesh_axes,
+                                  param_spec, param_shardings)
+
+
+class FakeMesh:
+    """Minimal mesh stand-in for rule unit tests (no devices needed)."""
+    def __init__(self, shape_map):
+        self.shape = shape_map
+        self.axis_names = tuple(shape_map)
+
+
+MESH16 = FakeMesh({"data": 16, "model": 16})
+
+
+def test_heads_shard_when_divisible():
+    spec = param_spec("blocks/attn/wq", (2048, 32, 64), MESH16, fsdp=False)
+    assert spec == P(None, "model", None)
+
+
+def test_whisper_heads_fall_back_to_head_dim():
+    """20 heads don't divide 16 -> the model axis moves to head_dim (H7)."""
+    spec = param_spec("dec_blocks/attn/wq", (1280, 20, 64), MESH16,
+                      fsdp=False)
+    assert spec == P(None, None, "model")
+    # and if neither divides, fully replicated
+    spec = param_spec("dec_blocks/attn/wq", (1280, 20, 63), MESH16,
+                      fsdp=False)
+    assert spec == P(None, None, None)
+
+
+def test_vocab_shard_and_fallback():
+    assert param_spec("embed/table", (102400, 2048), MESH16,
+                      fsdp=False) == P("model", None)
+    # whisper vocab 51866 % 16 != 0 -> replicated
+    assert param_spec("embed/table", (51866, 1280), MESH16,
+                      fsdp=False) == P(None, None)
+
+
+def test_fsdp_shards_dmodel():
+    spec = param_spec("blocks/mlp/wi", (8192, 22528), MESH16, fsdp=True)
+    assert spec == P("data", "model")
+
+
+def test_expert_parallel():
+    spec = param_spec("moe_blocks/moe/wi", (26, 64, 2048, 1408), MESH16,
+                      fsdp=False)
+    assert spec == P(None, "model", None, None)
+
+
+def test_stacked_leading_axis_never_sharded():
+    spec = param_spec("blocks/attn/wo", (40, 64, 128, 8192), MESH16,
+                      fsdp=True)
+    assert spec[0] is None
+
+
+def test_norms_replicated():
+    assert param_spec("blocks/norm1/scale", (2048,), MESH16,
+                      fsdp=True) == P()
+
+
+def test_param_shardings_on_real_mesh():
+    mesh = make_debug_mesh()
+    cfg = get_smoke_config("internlm2-1.8b")
+    params = init_model(cfg, jax.random.PRNGKey(0))
+    sh = param_shardings(cfg, params, mesh)
+    assert len(jax.tree.leaves(sh)) == len(jax.tree.leaves(params))
+
+
+def test_collective_bytes_parser():
+    hlo = """
+HloModule test
+ENTRY main {
+  %p0 = f32[128,256]{1,0} parameter(0)
+  %ag = f32[2048,256]{1,0} all-gather(%p0), replica_groups={}
+  %ar = f32[128,256]{1,0} all-reduce(%p0), to_apply=%sum
+  %cp = f32[128,256]{1,0} collective-permute(%p0), source_target_pairs={}
+}
+"""
+    out = roofline.collective_bytes(hlo)
+    assert out["all-gather"] == 2048 * 256 * 4
+    assert out["all-reduce"] == 128 * 256 * 4
+    assert out["collective-permute"] == 128 * 256 * 4
+    assert out["reduce-scatter"] == 0
+
+
+def test_roofline_terms_dominance():
+    t = roofline.roofline_terms(197e12, 0.0, {"all-reduce": 0}, 1)
+    assert t["dominant"] == "compute"
+    assert t["t_compute_s"] == 1.0
+    t = roofline.roofline_terms(0.0, 819e9, {}, 1)
+    assert t["dominant"] == "memory"
+
+
+def test_count_params_moe_active():
+    cfg = get_smoke_config("deepseek-moe-16b")
+    params = jax.eval_shape(
+        lambda k: init_model(cfg, k), jax.random.PRNGKey(0))
+    counts = roofline.count_params(params,
+                                   active_moe_frac=cfg.top_k / cfg.n_routed)
+    assert 0 < counts["active"] < counts["total"]

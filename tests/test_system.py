@@ -1,0 +1,70 @@
+"""End-to-end behaviour tests: the paper's claims on small lattices,
+plus the full sim driver + trajectory machinery."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import observables as obs
+from repro.core.sim import SimConfig, Simulation
+
+
+def test_magnetization_tracks_onsager():
+    """Fig. 5 analogue: simulated steady-state |m| vs the exact solution
+    at temperatures away from Tc (finite-size effects are small there)."""
+    for temp in (1.5, 2.0):
+        sim = Simulation(SimConfig(n=96, m=96, temperature=temp, seed=11,
+                                   engine="multispin", init_p_up=1.0))
+        sim.run(400)
+        samples = sim.trajectory(n_measure=20, sweeps_between=10)
+        m = float(np.abs(samples).mean())
+        exact = float(obs.onsager_magnetization(temp))
+        assert abs(m - exact) < 0.05, (temp, m, exact)
+
+
+def test_disorder_above_tc():
+    sim = Simulation(SimConfig(n=96, m=96, temperature=4.0, seed=13,
+                               engine="multispin"))
+    sim.run(200)
+    samples = sim.trajectory(n_measure=20, sweeps_between=5)
+    assert float(np.abs(samples).mean()) < 0.12
+
+
+def test_binder_ordering_across_tc():
+    """Fig. 6 analogue: U_L ~ 2/3 below Tc, small above Tc."""
+    below = Simulation(SimConfig(n=48, m=48, temperature=1.8, seed=17,
+                                 engine="multispin", init_p_up=1.0))
+    below.run(300)
+    u_below = float(obs.binder_cumulant(jnp.asarray(
+        below.trajectory(30, 5))))
+    above = Simulation(SimConfig(n=48, m=48, temperature=4.5, seed=19,
+                                 engine="multispin"))
+    above.run(300)
+    u_above = float(obs.binder_cumulant(jnp.asarray(
+        above.trajectory(30, 5))))
+    assert u_below > 0.6
+    assert u_above < 0.35
+    assert u_below > u_above
+
+
+def test_engines_statistically_agree():
+    """All engines sample the same distribution: steady-state |m| within
+    tolerance of each other at T=2.0."""
+    mags = {}
+    for engine in ("basic", "basic_philox", "multispin", "tensorcore"):
+        sim = Simulation(SimConfig(n=64, m=64, temperature=2.0, seed=23,
+                                   engine=engine, tc_block=8,
+                                   init_p_up=1.0))
+        sim.run(300)
+        samples = sim.trajectory(15, 5)
+        mags[engine] = float(np.abs(samples).mean())
+    exact = float(obs.onsager_magnetization(2.0))
+    for engine, m in mags.items():
+        assert abs(m - exact) < 0.06, (engine, mags)
+
+
+def test_sim_energy_decreases_on_quench():
+    sim = Simulation(SimConfig(n=64, m=64, temperature=1.2, seed=29,
+                               engine="basic_philox"))
+    e0 = sim.energy()
+    sim.run(100)
+    assert sim.energy() < e0

@@ -1,0 +1,147 @@
+"""Training loop: convergence, optimizer, checkpoint/restart equivalence."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import SHAPES, get_smoke_config
+from repro.data import DataIterator, make_batch
+from repro.models import init_model
+from repro.train import OptConfig, make_train_step, opt_init
+from repro.train.optim import global_norm, schedule, update
+
+
+def _tiny_setup(arch="internlm2-1.8b", steps=None):
+    cfg = get_smoke_config(arch)
+    key = jax.random.PRNGKey(0)
+    params = init_model(cfg, key)
+    opt = opt_init(params)
+    ocfg = OptConfig(lr=1e-2, warmup=5, total_steps=100, clip_norm=1.0)
+    step = jax.jit(make_train_step(cfg, ocfg))
+    return cfg, params, opt, step
+
+
+def test_loss_decreases():
+    cfg, params, opt, step = _tiny_setup()
+    shape = SHAPES["train_4k"]
+    losses = []
+    for i in range(30):
+        batch = make_batch(cfg, shape, step=0, seed=1, batch_override=4,
+                           seq_override=32)  # same batch: must memorize
+        params, opt, m = step(params, opt, batch)
+        losses.append(float(m["loss"]))
+    assert losses[-1] < losses[0] * 0.7, losses[::6]
+    assert np.isfinite(losses).all()
+
+
+def test_moe_train_step_runs():
+    cfg, params, opt, step = _tiny_setup("deepseek-moe-16b")
+    batch = make_batch(cfg, SHAPES["train_4k"], step=0, seed=1,
+                       batch_override=2, seq_override=16)
+    params, opt, m = step(params, opt, batch)
+    assert np.isfinite(float(m["loss"]))
+    assert np.isfinite(float(m["aux"]))
+
+
+def test_grad_clip_bounds_update():
+    x = {"w": jnp.ones((4, 4)) * 1e6}
+    assert float(global_norm(x)) == pytest.approx(4e6)
+    ocfg = OptConfig(clip_norm=1.0, lr=1.0, warmup=0, weight_decay=0.0)
+    state = opt_init(x)
+    new_x, _, metrics = update(ocfg, x, x, state)
+    assert float(metrics["grad_norm"]) == pytest.approx(4e6, rel=1e-3)
+    # clipped: per-element grad after scale is tiny -> update bounded by lr
+    assert float(jnp.abs(new_x["w"] - x["w"]).max()) <= 1.01 * 1.0 * 2
+
+
+def test_schedule_warmup_and_decay():
+    ocfg = OptConfig(lr=1.0, warmup=10, total_steps=100)
+    assert float(schedule(ocfg, jnp.int32(5))) == pytest.approx(0.5)
+    assert float(schedule(ocfg, jnp.int32(10))) == pytest.approx(1.0)
+    assert float(schedule(ocfg, jnp.int32(100))) == pytest.approx(0.1,
+                                                                  abs=1e-3)
+
+
+def test_data_pipeline_deterministic_skip():
+    cfg = get_smoke_config("internlm2-1.8b")
+    it1 = DataIterator(cfg, SHAPES["train_4k"], seed=3, batch_override=2,
+                       seq_override=8)
+    for _ in range(5):
+        next(it1)
+    s5, b5 = next(it1)
+    it2 = DataIterator(cfg, SHAPES["train_4k"], seed=3, batch_override=2,
+                       seq_override=8)
+    it2.skip_to(5)
+    s5b, b5b = next(it2)
+    assert s5 == s5b == 5
+    np.testing.assert_array_equal(np.asarray(b5["tokens"]),
+                                  np.asarray(b5b["tokens"]))
+
+
+def test_train_restart_equivalence(tmp_path):
+    """10 straight steps == 5 steps + checkpoint + restore + 5 steps."""
+    from repro.ckpt import Checkpointer
+    cfg, params, opt, step = _tiny_setup()
+    shape = SHAPES["train_4k"]
+
+    def run(params, opt, start, n):
+        it = DataIterator(cfg, shape, seed=5, batch_override=2,
+                          seq_override=16)
+        it.skip_to(start)
+        for _ in range(n):
+            _, batch = next(it)
+            params, opt, m = step(params, opt, batch)
+        return params, opt
+
+    pa, oa = run(params, opt, 0, 10)
+
+    pb, ob = run(params, opt, 0, 5)
+    ck = Checkpointer(str(tmp_path / "ck"))
+    ck.save(5, {"params": pb, "opt": ob})
+    st, restored = ck.restore({"params": pb, "opt": ob})
+    assert st == 5
+    pc, oc = run(restored["params"], restored["opt"], 5, 5)
+
+    for la, lc in zip(jax.tree.leaves(pa), jax.tree.leaves(pc)):
+        np.testing.assert_array_equal(np.asarray(la), np.asarray(lc))
+
+
+def test_serve_step_greedy():
+    from repro.models import init_cache
+    from repro.train import make_serve_step
+    cfg = get_smoke_config("internlm2-1.8b")
+    params = init_model(cfg, jax.random.PRNGKey(0))
+    serve = jax.jit(make_serve_step(cfg))
+    cache = init_cache(cfg, 2, 16)
+    tok = jnp.ones((2, 1), jnp.int32)
+    for _ in range(4):
+        tok, cache = serve(params, cache, tok)
+    assert tok.shape == (2, 1)
+    assert int(cache["length"]) == 4
+
+
+def test_microbatched_grads_match_full_batch():
+    """H9: 4-way gradient accumulation == full-batch step (same update)."""
+    import jax
+    cfg = get_smoke_config("internlm2-1.8b")
+    key = jax.random.PRNGKey(9)
+    params = init_model(cfg, key)
+    opt = opt_init(params)
+    ocfg = OptConfig(lr=1e-2, warmup=0, total_steps=10)
+    batch = make_batch(cfg, SHAPES["train_4k"], step=0, seed=2,
+                       batch_override=8, seq_override=16)
+    full = jax.jit(make_train_step(cfg, ocfg))
+    micro = jax.jit(make_train_step(cfg, ocfg, microbatches=4))
+    pf, of, mf = full(params, opt, batch)
+    pm, om, mm = micro(params, opt, batch)
+    assert abs(float(mf["loss"]) - float(mm["loss"])) < 1e-4
+    assert abs(float(mf["grad_norm"]) - float(mm["grad_norm"])) < 1e-3
+    # Adam's first-step update is ~sign(g)*lr, so near-zero grads that
+    # flip sign under bf16 accumulation-order noise move a param by
+    # up to 2*lr; bound by that, and require the bulk to be tight.
+    lr = 1e-2
+    for a, b in zip(jax.tree.leaves(pf), jax.tree.leaves(pm)):
+        a, b = np.asarray(a), np.asarray(b)
+        np.testing.assert_allclose(a, b, atol=2.1 * lr, rtol=0)
+        frac_tight = np.mean(np.abs(a - b) < 1e-4)
+        assert frac_tight > 0.99, frac_tight
