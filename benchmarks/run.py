@@ -37,39 +37,32 @@ def _row(name, us, derived):
 
 
 # ---------------------------------------------------------------------------
-# Table 1: single-device engine comparison (basic / tensor-core / stencil)
+# Table 1: single-device engine comparison, driven through the registry --
+# every registered engine is benchmarked with the same (init, sweep) calls
 # ---------------------------------------------------------------------------
+
+# wolff excluded: a "sweep" (one cluster flip) is not comparable in
+# flips/ns; spinglass/stencil run but have no paper column (EXPERIMENTS.md)
+T1_ENGINES = ("basic", "basic_philox", "multispin", "tensorcore",
+              "stencil_pallas", "spinglass")
+
 
 def table1_single_device(n=256, sweeps=10):
-    from repro.core import lattice as lat, metropolis as metro, \
-        multispin as ms, tensorcore as tc
-    key = jax.random.PRNGKey(0)
-    full = lat.init_lattice(key, n, n)
-    b, w = lat.split_checkerboard(full)
-    beta = jnp.float32(1 / 2.27)
+    from repro.core.engine import make_engine
+    from repro.core.sim import SimConfig
     spins = n * n * sweeps
-
-    dt, _ = _timeit(lambda: metro.run_sweeps(b, w, beta, key, sweeps))
-    _row("t1_basic_jnp", dt * 1e6, f"flips_per_ns={spins/dt/1e9:.4f}")
-
-    dt, _ = _timeit(lambda: metro.run_sweeps_philox(b, w, beta, sweeps,
-                                                    seed=1))
-    _row("t1_basic_philox_fused", dt * 1e6,
-         f"flips_per_ns={spins/dt/1e9:.4f}")
-
-    planes = tc.decompose(full)
-    dt, _ = _timeit(lambda: tc.run_sweeps_tc(planes, beta, key, sweeps,
-                                             block=64))
-    _row("t1_tensorcore_gemm", dt * 1e6, f"flips_per_ns={spins/dt/1e9:.4f}")
-
-    bw, ww = ms.pack_lattice(b, w)
-    dt, _ = _timeit(lambda: ms.run_sweeps_packed(bw, ww, beta, sweeps,
-                                                 seed=1))
-    _row("t1_multispin_packed", dt * 1e6, f"flips_per_ns={spins/dt/1e9:.4f}")
+    for name in T1_ENGINES:
+        cfg = SimConfig(n=n, m=n, temperature=2.27, seed=1, engine=name,
+                        tc_block=64)
+        eng = make_engine(cfg)
+        state = eng.init_state(jax.random.PRNGKey(0))
+        dt, _ = _timeit(lambda: eng.sweeps(state, sweeps, 0))
+        _row(f"t1_{name}", dt * 1e6, f"flips_per_ns={spins/dt/1e9:.4f}")
 
 
 # ---------------------------------------------------------------------------
-# Table 2: multispin engine vs lattice size
+# Table 2: multispin engine vs lattice size, plus the batched-ensemble
+# variant (TPU-cluster follow-up): B replicas in one vmapped sweep
 # ---------------------------------------------------------------------------
 
 def table2_multispin_sizes(sweeps=5):
@@ -85,13 +78,25 @@ def table2_multispin_sizes(sweeps=5):
              f"flips_per_ns={n*n*sweeps/dt/1e9:.4f}")
 
 
+def table2_ensemble_batch(sweeps=5, batch=8):
+    """Replica batching: flips/ns of one vmapped sweep over B replicas --
+    the aggregate-throughput lever the TPU-cluster paper exploits."""
+    from repro.core.ensemble import Ensemble
+    for n in (128, 256):
+        ens = Ensemble(n=n, m=n, temperatures=[1.5] * batch,
+                       seeds=list(range(batch)), engine="multispin")
+        dt, _ = _timeit(lambda: ens.run(sweeps), iters=2)
+        _row(f"t2_ensemble_B{batch}_multispin_{n}x{n}", dt * 1e6,
+             f"flips_per_ns={batch*n*n*sweeps/dt/1e9:.4f}")
+
+
 # ---------------------------------------------------------------------------
 # Tables 3/4: weak + strong scaling of the distributed engines
 # ---------------------------------------------------------------------------
 
 def _mesh(nd):
-    return jax.make_mesh((nd, 1), ("data", "model"),
-                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    from repro.launch.mesh import make_mesh
+    return make_mesh((nd, 1), ("data", "model"))
 
 
 def table3_weak_scaling(per_dev_rows=256, cols=512, sweeps=5):
@@ -214,9 +219,9 @@ def main() -> None:
     ap.add_argument("--only", default="")
     args, _ = ap.parse_known_args()
     benches = [table1_single_device, table2_multispin_sizes,
-               table3_weak_scaling, table4_strong_scaling,
-               table5_packed_scaling, fig5_validation, kernel_block_sweep,
-               roofline_summary]
+               table2_ensemble_batch, table3_weak_scaling,
+               table4_strong_scaling, table5_packed_scaling,
+               fig5_validation, kernel_block_sweep, roofline_summary]
     print("name,us_per_call,derived")
     for b in benches:
         if args.only and args.only not in b.__name__:

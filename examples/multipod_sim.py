@@ -16,8 +16,8 @@ N = 64
 nd = len(jax.devices())
 shape, axes = ((2, nd // 4, 2), ("pod", "data", "model")) if nd >= 8 \
     else ((nd, 1), ("data", "model"))
-mesh = jax.make_mesh(shape, axes,
-                     axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+from repro.launch.mesh import make_mesh
+mesh = make_mesh(shape, axes)
 print(f"devices={nd} mesh={dict(mesh.shape)}")
 
 full = lat.init_lattice(jax.random.PRNGKey(7), N, N)

@@ -1,5 +1,10 @@
 """Reproduce the paper's validation figures (Fig. 5 magnetization curve,
-Fig. 6 Binder cumulant) on small lattices.
+Fig. 6 Binder cumulant) on small lattices -- batched.
+
+The whole temperature scan per lattice size is ONE Ensemble: every
+(temperature, seed) member advances inside a single vmapped, jit-compiled
+sweep (repro.core.ensemble, DESIGN.md S3), instead of one Simulation +
+one compilation per temperature.
 
 Run:  PYTHONPATH=src python examples/phase_transition.py
 """
@@ -7,24 +12,31 @@ import numpy as np
 import jax.numpy as jnp
 
 from repro.core import observables as obs
-from repro.core.sim import SimConfig, Simulation
+from repro.core.ensemble import Ensemble
 
 temps = [1.5, 1.8, 2.0, 2.1, 2.2, 2.27, 2.35, 2.5, 3.0]
 sizes = [32, 48]
 
+results = {}
+for L in sizes:
+    # ordered start below Tc: avoids the striped metastable states the
+    # paper reports in S5.3 for cold random starts
+    ens = Ensemble(n=L, m=L, temperatures=temps,
+                   seeds=[11 + i for i in range(len(temps))],
+                   engine="multispin", init_p_up=1.0)
+    samples = ens.trajectory(n_measure=40, sweeps_between=5,
+                             thermalize=400)        # (40, len(temps))
+    m = np.abs(samples).mean(axis=0)
+    u = [float(obs.binder_cumulant(jnp.asarray(samples[:, i])))
+         for i in range(len(temps))]
+    results[L] = (m, u)
+
 print("T      " + "".join(f"  L={L}:m,U_L   " for L in sizes) + " onsager")
-for T in temps:
+for t_idx, T in enumerate(temps):
     row = f"{T:5.2f} "
     for L in sizes:
-        # ordered start below Tc: avoids the striped metastable states
-        # the paper reports in S5.3 for cold random starts
-        sim = Simulation(SimConfig(n=L, m=L, temperature=T, seed=11,
-                                   engine="multispin", init_p_up=1.0))
-        sim.run(400)
-        samples = sim.trajectory(40, 5)
-        m = float(np.abs(samples).mean())
-        u = float(obs.binder_cumulant(jnp.asarray(samples)))
-        row += f"  {m:.3f},{u:+.3f} "
+        m, u = results[L]
+        row += f"  {m[t_idx]:.3f},{u[t_idx]:+.3f} "
     row += f"   {float(obs.onsager_magnetization(T)):.4f}"
     print(row)
 print(f"Tc = {obs.T_CRITICAL}")

@@ -1,0 +1,28 @@
+"""Version-compat shims for JAX APIs that moved between releases.
+
+The repo targets current JAX, but the tier-1 container pins an older
+jaxlib; these shims keep both working.  Keep this module tiny: one
+function per moved API, no behavior differences beyond the rename.
+"""
+from __future__ import annotations
+
+import jax
+
+
+def axis_size(axis_name):
+    """``jax.lax.axis_size`` (new) or ``psum(1, axis)`` (old) -- both are
+    static python ints inside shard_map, usable for ppermute tables."""
+    if hasattr(jax.lax, "axis_size"):
+        return jax.lax.axis_size(axis_name)
+    return jax.lax.psum(1, axis_name)
+
+
+def shard_map(f, *, mesh, in_specs, out_specs, check_vma: bool = True):
+    """``jax.shard_map`` (jax >= 0.6) or the ``jax.experimental`` original
+    (where ``check_vma`` was spelled ``check_rep``)."""
+    if hasattr(jax, "shard_map"):
+        return jax.shard_map(f, mesh=mesh, in_specs=in_specs,
+                             out_specs=out_specs, check_vma=check_vma)
+    from jax.experimental.shard_map import shard_map as _shard_map
+    return _shard_map(f, mesh=mesh, in_specs=in_specs,
+                      out_specs=out_specs, check_rep=check_vma)

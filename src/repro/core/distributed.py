@@ -30,6 +30,7 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
+from . import compat
 from . import metropolis as metro
 from . import rng as crng
 
@@ -52,7 +53,7 @@ def ring_shift(x: jax.Array, axis_names: Sequence[str], shift: int):
     names = list(axis_names)
 
     def perm(axis, val):
-        n = jax.lax.axis_size(axis)
+        n = compat.axis_size(axis)
         pairs = [((i - shift) % n, i) for i in range(n)]
         return jax.lax.ppermute(val, axis, pairs)
 
@@ -60,7 +61,7 @@ def ring_shift(x: jax.Array, axis_names: Sequence[str], shift: int):
     # positions that wrapped on the k-th axis also need the (k-1)-th hop
     for k in range(len(names) - 1, 0, -1):
         idx = jax.lax.axis_index(names[k])
-        n = jax.lax.axis_size(names[k])
+        n = compat.axis_size(names[k])
         at_wrap = (idx == 0) if shift == +1 else (idx == n - 1)
         cross = perm(names[k - 1], out)
         out = jnp.where(at_wrap, cross, out)
@@ -122,7 +123,7 @@ def _global_positions(shape, row_axes, col_axes):
     def multi_index(axes):
         idx = jnp.int32(0)
         for a in axes:
-            idx = idx * jax.lax.axis_size(a) + jax.lax.axis_index(a)
+            idx = idx * compat.axis_size(a) + jax.lax.axis_index(a)
         return idx
 
     r0 = multi_index(row_axes) * n_loc
@@ -186,7 +187,7 @@ def make_ising_step(mesh, *, n: int, m: int, seed: int = 0,
     sharding = jax.sharding.NamedSharding(mesh, spec)
 
     @functools.partial(
-        jax.shard_map, mesh=mesh,
+        compat.shard_map, mesh=mesh,
         in_specs=(spec, spec, P(), P()),
         out_specs=(spec, spec),
         check_vma=False)
@@ -262,7 +263,7 @@ def make_packed_ising_step(mesh, *, n: int, m: int, seed: int = 0,
             flip = flip | ((u < pacc).astype(jnp.uint32) << sh)
         return target ^ flip
 
-    @functools.partial(jax.shard_map, mesh=mesh,
+    @functools.partial(compat.shard_map, mesh=mesh,
                        in_specs=(spec, spec, P(), P()),
                        out_specs=(spec, spec), check_vma=False)
     def sweeps(black, white, inv_temp, sweep0):
@@ -284,7 +285,7 @@ def magnetization_dist(mesh, row_axes=None, col_axes=None):
     col_axes = tuple(col_axes if col_axes is not None else names[-1:])
     spec = P(row_axes, col_axes)
 
-    @functools.partial(jax.shard_map, mesh=mesh, in_specs=(spec, spec),
+    @functools.partial(compat.shard_map, mesh=mesh, in_specs=(spec, spec),
                        out_specs=P(), check_vma=False)
     def _mag(black, white):
         s = black.astype(jnp.float32).sum() + white.astype(jnp.float32).sum()

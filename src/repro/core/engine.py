@@ -1,0 +1,384 @@
+"""Pluggable engine registry: one protocol, seven update algorithms.
+
+The paper's contribution is *comparing implementations* of the same 2D
+Ising Metropolis update; this module is the seam that makes the
+implementations interchangeable (DESIGN.md S3).  Every engine subclasses
+:class:`Engine` and registers itself in :data:`ENGINES` under its paper
+name; the :class:`~repro.core.sim.Simulation` driver and the
+:class:`~repro.core.ensemble.Ensemble` batched driver dispatch purely
+through the registry, so adding an engine never touches the drivers.
+
+Protocol (all methods pure in the JAX sense unless noted):
+
+* ``init_state(key)``        -- PRNG key -> engine-native state pytree;
+* ``sweeps(state, n, step)`` -- advance ``n`` full lattice sweeps (stateful
+                                wrapper: owns jit caching / RNG offsets);
+* ``full_lattice(state)``    -- state -> the (N, M) +-1 int8 lattice;
+* ``magnetization(state)``   -- mean spin (scalar array);
+* ``state_arrays(state)``    -- state -> {name: np.ndarray} for .npz;
+* ``from_arrays(arrays)``    -- inverse of ``state_arrays``.
+
+Counter-based engines (Philox randomness addressed by (seed, position,
+offset), cuRAND semantics -- DESIGN.md S4) additionally expose
+``sweep_fn(state, inv_temp, seed, start_offset, n_sweeps)``: a pure
+function with *traceable* seed and temperature, which is what the
+ensemble driver ``vmap``s over a (temperature, seed) batch axis.
+"""
+from __future__ import annotations
+
+from typing import Callable, ClassVar, Dict, Type
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import lattice as lat
+from . import metropolis as metro
+from . import multispin as ms
+from . import observables as obs
+from . import spinglass as sg
+from . import tensorcore as tc
+from . import wolff as wolff_mod
+
+ENGINES: Dict[str, Type["Engine"]] = {}
+
+
+def register(cls: Type["Engine"]) -> Type["Engine"]:
+    """Class decorator: add an engine to the registry under ``cls.name``."""
+    assert cls.name not in ENGINES, f"duplicate engine {cls.name!r}"
+    ENGINES[cls.name] = cls
+    return cls
+
+
+def make_engine(config) -> "Engine":
+    """Instantiate the registered engine named by ``config.engine``."""
+    try:
+        cls = ENGINES[config.engine]
+    except KeyError:
+        raise ValueError(
+            f"unknown engine {config.engine!r}; registered engines: "
+            f"{sorted(ENGINES)}") from None
+    return cls(config)
+
+
+class Engine:
+    """Base class: holds the config, defines the protocol and defaults."""
+
+    name: ClassVar[str]
+    counter_based: ClassVar[bool] = False  # True: vmap-safe Philox sweeps
+
+    def __init__(self, config):
+        self.cfg = config
+
+    # -- construction -------------------------------------------------------
+    def init_state(self, key):
+        """Fresh state from a PRNG key (vmap-safe for batched init)."""
+        cfg = self.cfg
+        full = lat.init_lattice(key, cfg.n, cfg.m, p_up=cfg.init_p_up)
+        return self.from_full(full)
+
+    def from_full(self, full):
+        """(N, M) +-1 lattice -> engine-native state pytree."""
+        raise NotImplementedError
+
+    # -- views --------------------------------------------------------------
+    def full_lattice(self, state):
+        raise NotImplementedError
+
+    def magnetization(self, state):
+        b, w = lat.split_checkerboard(self.full_lattice(state))
+        return obs.magnetization(b, w)
+
+    def energy(self, state):
+        b, w = lat.split_checkerboard(self.full_lattice(state))
+        return obs.energy_per_spin(b, w)
+
+    # -- dynamics -----------------------------------------------------------
+    def sweeps(self, state, n_sweeps: int, step_count: int):
+        raise NotImplementedError
+
+    # -- checkpointing ------------------------------------------------------
+    def state_arrays(self, state) -> dict:
+        raise NotImplementedError
+
+    def from_arrays(self, arrays: dict):
+        raise NotImplementedError
+
+
+class CounterEngine(Engine):
+    """Shared machinery for counter-based (Philox skip-ahead) engines.
+
+    Subclasses implement ``color_update`` (one half-sweep of the target
+    plane); this base owns the 2-half-sweeps-per-sweep offset bookkeeping
+    behind the stateful ``sweeps`` protocol method, plus per-``n_sweeps``
+    jit caching.  The offset scheme must stay identical to the standalone
+    ``run_sweeps_philox``/``run_sweeps_packed`` wrappers (same stream,
+    cross-tied in tests/test_engines.py) or checkpoints would fork.
+    """
+
+    counter_based = True
+
+    def __init__(self, config):
+        super().__init__(config)
+        self._jit_cache: Dict[int, Callable] = {}
+
+    def color_update(self, target, op, inv_temp, is_black, seed, offset):
+        """One half-sweep; ``seed`` may be a python int or uint32 trace."""
+        raise NotImplementedError
+
+    def sweep_fn(self, state, inv_temp, seed, start_offset, n_sweeps: int):
+        """Pure sweep kernel: n_sweeps x (black, white) half-sweeps with
+        cuRAND-style offsets 2i / 2i+1 past ``start_offset``."""
+        start = jnp.uint32(start_offset)
+
+        def body(i, carry):
+            b, w = carry
+            off = start + 2 * jnp.uint32(i)
+            b = self.color_update(b, w, inv_temp, True, seed, off)
+            w = self.color_update(w, b, inv_temp, False, seed, off + 1)
+            return (b, w)
+
+        return jax.lax.fori_loop(0, n_sweeps, body, tuple(state))
+
+    def sweeps(self, state, n_sweeps: int, step_count: int):
+        fn = self._jit_cache.get(n_sweeps)
+        if fn is None:
+            seed = self.cfg.seed  # closed over: python int, full 64-bit keys
+            fn = jax.jit(lambda s, beta, off: self.sweep_fn(
+                s, beta, seed, off, n_sweeps))
+            self._jit_cache[n_sweeps] = fn
+        return fn(state, jnp.float32(self.cfg.inv_temp),
+                  jnp.uint32(2 * step_count))
+
+
+# ---------------------------------------------------------------------------
+# compact color-plane engines (basic / basic_philox / stencil_pallas)
+# ---------------------------------------------------------------------------
+
+class _PlanesEngine(Engine):
+    """Common state handling for (black, white) compact-plane engines."""
+
+    def from_full(self, full):
+        return tuple(lat.split_checkerboard(full))
+
+    def full_lattice(self, state):
+        return lat.merge_checkerboard(*state)
+
+    def magnetization(self, state):
+        return obs.magnetization(*state)
+
+    def state_arrays(self, state):
+        return {"black": np.asarray(state[0]), "white": np.asarray(state[1])}
+
+    def from_arrays(self, arrays):
+        return (jnp.asarray(arrays["black"]), jnp.asarray(arrays["white"]))
+
+
+@register
+class BasicEngine(_PlanesEngine):
+    """Paper S3.1 basic checkerboard Metropolis, jax.random uniforms."""
+
+    name = "basic"
+
+    def sweeps(self, state, n_sweeps, step_count):
+        key = jax.random.fold_in(jax.random.PRNGKey(self.cfg.seed),
+                                 step_count)
+        b, w, _ = metro.run_sweeps(*state, jnp.float32(self.cfg.inv_temp),
+                                   key, n_sweeps)
+        return (b, w)
+
+
+@register
+class BasicPhiloxEngine(_PlanesEngine, CounterEngine):
+    """Basic engine with in-place counter-based Philox (DESIGN.md S6.2)."""
+
+    name = "basic_philox"
+
+    def color_update(self, target, op, inv_temp, is_black, seed, offset):
+        return metro.update_color_philox(target, op, inv_temp, is_black,
+                                         seed, offset)
+
+
+@register
+class StencilPallasEngine(_PlanesEngine, CounterEngine):
+    """Fused Pallas stencil kernel (DESIGN.md S6.2); interpret-mode on CPU.
+
+    Philox is keyed on the global (row, col) index, so this engine is
+    bit-for-bit identical to ``basic_philox`` -- the kernel's pure-jnp
+    oracle -- at any block size (tested in tests/test_engines.py).
+    """
+
+    name = "stencil_pallas"
+
+    def __init__(self, config):
+        super().__init__(config)
+        # largest even row-block count that divides the plane height; the
+        # kernel requires even blocks so checkerboard parity is uniform
+        n = config.n
+        best = 0
+        for d in range(2, min(n, 256) + 1, 2):
+            if n % d == 0:
+                best = d
+        assert best, f"stencil_pallas needs an even lattice height, got {n}"
+        self.block_rows = best
+        self.interpret = jax.default_backend() != "tpu"
+
+    def color_update(self, target, op, inv_temp, is_black, seed, offset):
+        from repro.kernels.stencil.stencil import stencil_update
+        return stencil_update(target, op, inv_temp, is_black=is_black,
+                              seed=seed, offset=offset,
+                              block_rows=self.block_rows,
+                              interpret=self.interpret)
+
+
+# ---------------------------------------------------------------------------
+# multi-spin packed engine
+# ---------------------------------------------------------------------------
+
+@register
+class MultispinEngine(CounterEngine):
+    """Paper S3.3 multi-spin coding: 8 spins/uint32 word (DESIGN.md S2)."""
+
+    name = "multispin"
+
+    def from_full(self, full):
+        return ms.pack_lattice(*lat.split_checkerboard(full))
+
+    def full_lattice(self, state):
+        return lat.merge_checkerboard(*ms.unpack_lattice(*state))
+
+    def magnetization(self, state):
+        return obs.magnetization(*ms.unpack_lattice(*state))
+
+    def color_update(self, target, op, inv_temp, is_black, seed, offset):
+        return ms.update_color_packed(target, op, inv_temp, is_black,
+                                      seed, offset)
+
+    def state_arrays(self, state):
+        return {"black_words": np.asarray(state[0]),
+                "white_words": np.asarray(state[1])}
+
+    def from_arrays(self, arrays):
+        return (jnp.asarray(arrays["black_words"]),
+                jnp.asarray(arrays["white_words"]))
+
+
+# ---------------------------------------------------------------------------
+# tensor-core (MXU) engine
+# ---------------------------------------------------------------------------
+
+@register
+class TensorCoreEngine(Engine):
+    """Paper S3.2: neighbor sums as banded MXU matmuls (DESIGN.md S6.1)."""
+
+    name = "tensorcore"
+
+    def from_full(self, full):
+        return tc.decompose(full)
+
+    def full_lattice(self, state):
+        return tc.recompose(state)
+
+    def magnetization(self, state):
+        m = sum(p.astype(jnp.float32).sum() for p in state.values())
+        return m / (self.cfg.n * self.cfg.m)
+
+    def sweeps(self, state, n_sweeps, step_count):
+        key = jax.random.fold_in(jax.random.PRNGKey(self.cfg.seed),
+                                 step_count)
+        planes, _ = tc.run_sweeps_tc(state, jnp.float32(self.cfg.inv_temp),
+                                     key, n_sweeps, block=self.cfg.tc_block)
+        return planes
+
+    def state_arrays(self, state):
+        return {f"plane_{k}": np.asarray(v) for k, v in state.items()}
+
+    def from_arrays(self, arrays):
+        return {k: jnp.asarray(arrays[f"plane_{k}"])
+                for k in ("00", "01", "10", "11")}
+
+
+# ---------------------------------------------------------------------------
+# Wolff cluster engine
+# ---------------------------------------------------------------------------
+
+@register
+class WolffEngine(Engine):
+    """Wolff cluster updates (paper S2): one "sweep" = one cluster flip."""
+
+    name = "wolff"
+
+    def from_full(self, full):
+        return full
+
+    def full_lattice(self, state):
+        return state
+
+    def sweeps(self, state, n_sweeps, step_count):
+        key = jax.random.fold_in(jax.random.PRNGKey(self.cfg.seed),
+                                 step_count)
+        new, _ = wolff_mod.run_wolff(key, state,
+                                     jnp.float32(self.cfg.temperature),
+                                     n_sweeps)
+        return new
+
+    def state_arrays(self, state):
+        return {"lattice": np.asarray(state)}
+
+    def from_arrays(self, arrays):
+        return jnp.asarray(arrays["lattice"])
+
+
+# ---------------------------------------------------------------------------
+# Edwards-Anderson spin-glass engine
+# ---------------------------------------------------------------------------
+
+@register
+class SpinGlassEngine(Engine):
+    """2D +-J Edwards-Anderson spin glass (paper S6's extension).
+
+    State carries the quenched couplings alongside the lattice so a
+    checkpoint restores the exact disorder realization.  Couplings are a
+    pure function of the config seed (fold_in with a fixed tag), so two
+    simulations with the same seed share a disorder sample.
+    """
+
+    name = "spinglass"
+
+    _COUPLING_TAG = 0x51A55  # "glass": fold_in tag for the coupling stream
+
+    def from_full(self, full):
+        cfg = self.cfg
+        ck = jax.random.fold_in(jax.random.PRNGKey(cfg.seed),
+                                self._COUPLING_TAG)
+        j_up, j_left = sg.init_couplings(ck, cfg.n, cfg.m,
+                                         p_ferro=cfg.p_ferro)
+        return (full, j_up, j_left)
+
+    def full_lattice(self, state):
+        return state[0]
+
+    def magnetization(self, state):
+        return state[0].astype(jnp.float32).mean()
+
+    def energy(self, state):
+        return sg.energy_per_spin(*state)
+
+    def sweeps(self, state, n_sweeps, step_count):
+        full, j_up, j_left = state
+        key = jax.random.fold_in(jax.random.PRNGKey(self.cfg.seed),
+                                 step_count)
+        full, _ = sg.run_sweeps(full, j_up, j_left,
+                                jnp.float32(self.cfg.inv_temp), key,
+                                n_sweeps)
+        return (full, j_up, j_left)
+
+    def state_arrays(self, state):
+        return {"lattice": np.asarray(state[0]),
+                "j_up": np.asarray(state[1]),
+                "j_left": np.asarray(state[2])}
+
+    def from_arrays(self, arrays):
+        return (jnp.asarray(arrays["lattice"]),
+                jnp.asarray(arrays["j_up"]),
+                jnp.asarray(arrays["j_left"]))

@@ -1,0 +1,119 @@
+"""Batched ensemble driver: one compiled sweep for a whole phase diagram.
+
+The TPU-cluster follow-up to the paper (Yang et al., "High Performance
+Monte Carlo Simulation of Ising Model on TPU Clusters") batches many
+replicas/temperatures through one update; this driver is that idea on top
+of the engine registry.  Any *counter-based* engine (Philox randomness
+addressed by (seed, position, offset) -- DESIGN.md S4) exposes a pure
+``sweep_fn`` whose seed and temperature are traceable, so the whole
+ensemble advances in ONE ``jax.vmap``-ed, jit-compiled call over a batch
+axis of (temperature, seed) pairs: a phase-diagram scan or a replica set
+costs one compilation and one device dispatch per measurement interval.
+
+Key-based engines (``basic``, ``tensorcore``, ``wolff``, ``spinglass``)
+are rejected: their randomness is not a pure function of traced inputs,
+so members would not reproduce the single-simulation trajectories.
+"""
+from __future__ import annotations
+
+from typing import Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .engine import make_engine
+from .sim import SimConfig
+
+
+class Ensemble:
+    """A batch of independent lattices, one (temperature, seed) each.
+
+    Bit-exactness contract: member ``i`` of the ensemble follows exactly
+    the trajectory of ``Simulation(SimConfig(temperature=temps[i],
+    seed=seeds[i], ...))`` for seeds < 2**32 (tested in
+    tests/test_ensemble.py).
+    """
+
+    def __init__(self, n: int, m: int, temperatures: Sequence[float],
+                 seeds: Optional[Sequence[int]] = None,
+                 engine: str = "multispin", init_p_up: float = 0.5):
+        temps = np.asarray(temperatures, np.float32)
+        assert temps.ndim == 1 and temps.size > 0, "need a 1-D temp batch"
+        if seeds is None:
+            seeds = np.arange(temps.size)
+        seeds = np.asarray(seeds)
+        assert seeds.shape == temps.shape, (seeds.shape, temps.shape)
+
+        cfg = SimConfig(n=n, m=m, engine=engine, init_p_up=init_p_up)
+        self.engine = make_engine(cfg)
+        if not self.engine.counter_based:
+            raise ValueError(
+                f"engine {engine!r} is not counter-based; Ensemble needs a "
+                "Philox engine whose sweep_fn is a pure function of "
+                "(seed, offset) -- see DESIGN.md S3/S4")
+        self.config = cfg
+        self.temperatures = temps
+        # invert in python-float precision exactly like SimConfig.inv_temp
+        # (1.0/float32(T) can land 1 ulp off float32(1.0/T), which would
+        # eventually fork a member from its Simulation trajectory)
+        self.inv_temps = jnp.asarray(
+            [1.0 / float(t) for t in np.asarray(temperatures).tolist()],
+            jnp.float32)
+        self.seeds = jnp.asarray(seeds.astype(np.int64) & 0xFFFFFFFF,
+                                 jnp.uint32)
+        self.step_count = 0
+        self._jit_cache = {}
+
+        keys = jax.vmap(jax.random.PRNGKey)(
+            jnp.asarray(seeds, jnp.int32))
+        self.states = jax.jit(jax.vmap(self.engine.init_state))(keys)
+        # measurement wrappers jitted once (jit caches on the fn object)
+        self._magnetizations = jax.jit(jax.vmap(self.engine.magnetization))
+        self._full_lattices = jax.jit(jax.vmap(self.engine.full_lattice))
+
+    @property
+    def size(self) -> int:
+        return int(self.temperatures.size)
+
+    def _compiled(self, n_sweeps: int):
+        fn = self._jit_cache.get(n_sweeps)
+        if fn is None:
+            def one(state, inv_temp, seed, start_offset):
+                state = self.engine.sweep_fn(state, inv_temp, seed,
+                                             start_offset, n_sweeps)
+                return state, self.engine.magnetization(state)
+
+            fn = jax.jit(jax.vmap(one, in_axes=(0, 0, 0, None)))
+            self._jit_cache[n_sweeps] = fn
+        return fn
+
+    def run(self, n_sweeps: int) -> np.ndarray:
+        """Advance every member ``n_sweeps`` sweeps in one vmapped call.
+
+        Returns the (B,) per-member magnetizations after the sweeps -- at
+        fixed seeds this IS the magnetization-vs-temperature curve.
+        """
+        self.states, mags = self._compiled(n_sweeps)(
+            self.states, self.inv_temps, self.seeds,
+            jnp.uint32(2 * self.step_count))
+        self.step_count += n_sweeps
+        return np.asarray(mags)
+
+    def magnetizations(self) -> np.ndarray:
+        """(B,) per-member magnetization of the current states."""
+        return np.asarray(self._magnetizations(self.states))
+
+    def full_lattices(self) -> np.ndarray:
+        """(B, N, M) stacked +-1 lattices (measurement/debug view)."""
+        return np.asarray(self._full_lattices(self.states))
+
+    def trajectory(self, n_measure: int, sweeps_between: int,
+                   thermalize: int = 0) -> np.ndarray:
+        """(n_measure, B) magnetization samples along the trajectory."""
+        if thermalize:
+            self.run(thermalize)
+        out = np.empty((n_measure, self.size), np.float32)
+        for i in range(n_measure):
+            out[i] = self.run(sweeps_between)
+        return out

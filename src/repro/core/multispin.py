@@ -47,10 +47,12 @@ def acceptance_prob(inv_temp, s_u32, nn_u32):
     return jnp.exp(-2.0 * inv_temp * (2.0 * s - 1.0) * (2.0 * nn - 4.0))
 
 
-def word_randoms(seed: int, word_index, offset):
-    """8 uint32 draws per word: two Philox4x32 calls (cuRAND-style)."""
-    k0 = jnp.uint32(seed & 0xFFFFFFFF)
-    k1 = jnp.uint32((seed >> 32) & 0xFFFFFFFF)
+def word_randoms(seed, word_index, offset):
+    """8 uint32 draws per word: two Philox4x32 calls (cuRAND-style).
+
+    ``seed`` may be a python int or a traced uint32 array (ensemble vmap).
+    """
+    k0, k1 = crng.seed_keys(seed)
     z = jnp.zeros_like(word_index)
     lo = crng.philox4x32(jnp.uint32(2 * offset), z, word_index, z, k0, k1)
     hi = crng.philox4x32(jnp.uint32(2 * offset + 1), z, word_index, z, k0, k1)

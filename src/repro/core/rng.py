@@ -72,18 +72,33 @@ def philox4x32(c0, c1, c2, c3, k0, k1, rounds: int = 10):
     return c0, c1, c2, c3
 
 
-def uniforms(seed: int, sequence, offset, n_lanes: int = 4):
+def seed_keys(seed):
+    """Split a seed into the two Philox key lanes ``(k0, k1)``.
+
+    Accepts either a python int (full 64-bit split, cuRAND semantics) or a
+    traced uint32 array (high lane zero) -- the latter is what lets the
+    ensemble driver ``vmap`` a batch of per-replica seeds through the same
+    compiled sweep (DESIGN.md S4).
+    """
+    if isinstance(seed, (int, np.integer)):
+        return (jnp.uint32(seed & 0xFFFFFFFF),
+                jnp.uint32((seed >> 32) & 0xFFFFFFFF))
+    seed = jnp.asarray(seed).astype(jnp.uint32)
+    return seed, jnp.zeros_like(seed)
+
+
+def uniforms(seed, sequence, offset, n_lanes: int = 4):
     """cuRAND-style draw: (seed, sequence, offset) -> 4 uniform floats in [0,1).
 
     ``sequence``/``offset`` are uint32 arrays (e.g. linear thread index and a
     per-launch monotonically increasing offset).  Matches the paper's scheme
     where every kernel launch re-inits Philox with the same seed, the thread's
     grid index as sequence, and the cumulative draw count as offset.
+    ``seed`` may be a python int or a traced uint32 array (:func:`seed_keys`).
     """
     seq = jnp.asarray(sequence, jnp.uint32)
     off = jnp.asarray(offset, jnp.uint32)
-    k0 = jnp.uint32(seed & 0xFFFFFFFF)
-    k1 = jnp.uint32((seed >> 32) & 0xFFFFFFFF)
+    k0, k1 = seed_keys(seed)
     r0, r1, r2, r3 = philox4x32(off, jnp.zeros_like(seq), seq,
                                 jnp.zeros_like(seq), k0, k1)
     return tuple(u32_to_uniform(r) for r in (r0, r1, r2, r3))[:n_lanes]

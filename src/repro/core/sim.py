@@ -1,25 +1,24 @@
-"""Simulation driver: engine selection, measurement schedule, checkpointing.
+"""Simulation driver: registry-dispatched engines, measurements, checkpoints.
 
-Ties the three single-device engines (basic / multispin / tensorcore) and
-the distributed engine behind one interface.  State (lattice + RNG offset +
-step counter) checkpoints atomically to .npz; a restarted run continues the
-exact Philox stream (fault-tolerance contract, tested in tests/).
+``Simulation`` owns the (state, step_count) pair and delegates every
+engine-specific operation -- state layout, sweeps, observables, checkpoint
+(de)serialization -- to the :mod:`repro.core.engine` registry, so the
+driver contains no per-engine branches (DESIGN.md S3).  State (lattice +
+RNG offset + step counter) checkpoints atomically to .npz; a restarted
+run of a counter-based engine continues the exact Philox stream
+(fault-tolerance contract, tested in tests/).
 """
 from __future__ import annotations
 
 import dataclasses
+import json
 import os
 import tempfile
-from typing import Optional
 
 import jax
-import jax.numpy as jnp
 import numpy as np
 
-from . import lattice as lat
-from . import metropolis, multispin, observables, tensorcore
-
-ENGINES = ("basic", "basic_philox", "multispin", "tensorcore")
+from .engine import ENGINES, make_engine
 
 
 @dataclasses.dataclass
@@ -35,6 +34,8 @@ class SimConfig:
     # reports that cold random starts on large lattices can fall into
     # long-lived striped metastable states.
     init_p_up: float = 0.5
+    # spin-glass only: probability that a quenched bond is ferromagnetic
+    p_ferro: float = 0.5
 
     @property
     def inv_temp(self) -> float:
@@ -42,79 +43,31 @@ class SimConfig:
 
 
 class Simulation:
-    """2D Ising Metropolis simulation with a pluggable engine."""
+    """2D Ising simulation with a registry-pluggable engine."""
 
     def __init__(self, config: SimConfig):
-        assert config.engine in ENGINES, config.engine
         self.config = config
+        self.engine = make_engine(config)
         self.step_count = 0
-        key = jax.random.PRNGKey(config.seed)
-        full = lat.init_lattice(key, config.n, config.m,
-                                p_up=config.init_p_up)
-        self._set_lattice(full)
+        self.state = self.engine.init_state(
+            jax.random.PRNGKey(config.seed))
 
     # -- state ------------------------------------------------------------
-    def _set_lattice(self, full: jax.Array) -> None:
-        cfg = self.config
-        if cfg.engine == "tensorcore":
-            self.state = tensorcore.decompose(full)
-        else:
-            b, w = lat.split_checkerboard(full)
-            if cfg.engine == "multispin":
-                self.state = multispin.pack_lattice(b, w)
-            else:
-                self.state = (b, w)
-
     def full_lattice(self) -> jax.Array:
-        cfg = self.config
-        if cfg.engine == "tensorcore":
-            return tensorcore.recompose(self.state)
-        if cfg.engine == "multispin":
-            b, w = multispin.unpack_lattice(*self.state)
-        else:
-            b, w = self.state
-        return lat.merge_checkerboard(b, w)
+        return self.engine.full_lattice(self.state)
 
     # -- dynamics ---------------------------------------------------------
     def run(self, n_sweeps: int) -> None:
-        cfg = self.config
-        beta = jnp.float32(cfg.inv_temp)
-        if cfg.engine == "basic":
-            key = jax.random.fold_in(jax.random.PRNGKey(cfg.seed),
-                                     self.step_count)
-            b, w, _ = metropolis.run_sweeps(*self.state, beta, key, n_sweeps)
-            self.state = (b, w)
-        elif cfg.engine == "basic_philox":
-            self.state = tuple(metropolis.run_sweeps_philox(
-                *self.state, beta, n_sweeps, seed=cfg.seed,
-                start_offset=2 * self.step_count))
-        elif cfg.engine == "multispin":
-            self.state = tuple(multispin.run_sweeps_packed(
-                *self.state, beta, n_sweeps, seed=cfg.seed,
-                start_offset=2 * self.step_count))
-        else:  # tensorcore
-            key = jax.random.fold_in(jax.random.PRNGKey(cfg.seed),
-                                     self.step_count)
-            planes, _ = tensorcore.run_sweeps_tc(
-                self.state, beta, key, n_sweeps, block=cfg.tc_block)
-            self.state = planes
+        self.state = self.engine.sweeps(self.state, n_sweeps,
+                                        self.step_count)
         self.step_count += n_sweeps
 
     # -- measurement ------------------------------------------------------
     def magnetization(self) -> float:
-        cfg = self.config
-        if cfg.engine == "tensorcore":
-            m = sum(p.astype(jnp.float32).sum() for p in self.state.values())
-            return float(m / (cfg.n * cfg.m))
-        if cfg.engine == "multispin":
-            b, w = multispin.unpack_lattice(*self.state)
-        else:
-            b, w = self.state
-        return float(observables.magnetization(b, w))
+        return float(self.engine.magnetization(self.state))
 
     def energy(self) -> float:
-        b, w = lat.split_checkerboard(self.full_lattice())
-        return float(observables.energy_per_spin(b, w))
+        return float(self.engine.energy(self.state))
 
     def trajectory(self, n_measure: int, sweeps_between: int,
                    thermalize: int = 0) -> np.ndarray:
@@ -131,32 +84,30 @@ class Simulation:
     def save(self, path: str) -> None:
         """Atomic checkpoint (write temp + rename)."""
         cfg = self.config
-        arrays = {}
-        if cfg.engine == "tensorcore":
-            for k, v in self.state.items():
-                arrays[f"plane_{k}"] = np.asarray(v)
-        else:
-            arrays["s0"], arrays["s1"] = (np.asarray(s) for s in self.state)
+        arrays = {f"state_{k}": v
+                  for k, v in self.engine.state_arrays(self.state).items()}
         fd, tmp = tempfile.mkstemp(dir=os.path.dirname(path) or ".",
                                    suffix=".tmp")
         with os.fdopen(fd, "wb") as f:
             np.savez(f, step_count=self.step_count,
-                     engine=cfg.engine, n=cfg.n, m=cfg.m,
-                     temperature=cfg.temperature, seed=cfg.seed, **arrays)
+                     config_json=json.dumps(dataclasses.asdict(cfg)),
+                     **arrays)
         os.replace(tmp, path)
 
     @classmethod
     def restore(cls, path: str) -> "Simulation":
         with np.load(path, allow_pickle=False) as z:
-            cfg = SimConfig(n=int(z["n"]), m=int(z["m"]),
-                            temperature=float(z["temperature"]),
-                            seed=int(z["seed"]), engine=str(z["engine"]))
+            if "config_json" not in z.files:
+                raise ValueError(
+                    f"{path}: not a Simulation checkpoint in the registry "
+                    "layout (missing 'config_json'; pre-registry .npz "
+                    "files are not restorable by this release)")
+            cfg = SimConfig(**json.loads(str(z["config_json"])))
             sim = cls.__new__(cls)
             sim.config = cfg
+            sim.engine = make_engine(cfg)
             sim.step_count = int(z["step_count"])
-            if cfg.engine == "tensorcore":
-                sim.state = {k: jnp.asarray(z[f"plane_{k}"])
-                             for k in ("00", "01", "10", "11")}
-            else:
-                sim.state = (jnp.asarray(z["s0"]), jnp.asarray(z["s1"]))
+            arrays = {k[len("state_"):]: z[k] for k in z.files
+                      if k.startswith("state_")}
+            sim.state = sim.engine.from_arrays(arrays)
         return sim

@@ -49,8 +49,9 @@ def _kernel(beta_ref, seeds_ref, target_ref, op_m1_ref, op_0_ref, op_p1_ref,
 
     t = target_ref[...].astype(jnp.int32)
     if use_philox:
-        seed = seeds_ref[0]
-        offset = seeds_ref[1]
+        k0 = seeds_ref[0]
+        k1 = seeds_ref[1]
+        offset = seeds_ref[2]
         i = pl.program_id(0)
         h = op.shape[1]
         rows = i * block_rows + jax.lax.broadcasted_iota(
@@ -58,8 +59,7 @@ def _kernel(beta_ref, seeds_ref, target_ref, op_m1_ref, op_0_ref, op_p1_ref,
         cols = jax.lax.broadcasted_iota(jnp.int32, op.shape, 1)
         gidx = (rows * h + cols).astype(jnp.uint32)
         zero = jnp.zeros_like(gidx)
-        bits = crng.philox4x32(offset, zero, gidx, zero,
-                               seed, jnp.uint32(0))[0]
+        bits = crng.philox4x32(offset, zero, gidx, zero, k0, k1)[0]
         u = crng.u32_to_uniform(bits)
     else:
         u = uniforms_ref[...]
@@ -84,7 +84,11 @@ def stencil_update(target, op_plane, inv_temp, *, is_black: bool,
     use_philox = uniforms is None
 
     beta = jnp.array([inv_temp], jnp.float32)
-    seeds = jnp.array([seed & 0xFFFFFFFF, offset], jnp.uint32)
+    # seed may be a python int or a traced uint32 scalar (ensemble vmap);
+    # both Philox key lanes ride to SMEM so 64-bit seeds match the
+    # basic_philox oracle bit-for-bit
+    k0, k1 = crng.seed_keys(seed)
+    seeds = jnp.stack([k0, k1, jnp.asarray(offset, jnp.uint32)])
 
     row_spec = pl.BlockSpec((block_rows, h), lambda i: (i, 0))
     specs = [

@@ -13,20 +13,25 @@ from __future__ import annotations
 import jax
 
 
-def _mk(shape, axes):
-    return jax.make_mesh(
-        shape, axes,
-        axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+def make_mesh(shape, axes):
+    """Version-compat ``jax.make_mesh``: pass explicit Auto axis_types on
+    jax >= 0.5 (where AxisType exists), plain mesh on older releases
+    (where every axis is Auto implicitly)."""
+    axis_type = getattr(jax.sharding, "AxisType", None)
+    if axis_type is None:
+        return jax.make_mesh(shape, axes)
+    return jax.make_mesh(shape, axes,
+                         axis_types=(axis_type.Auto,) * len(axes))
 
 
 def make_production_mesh(*, multi_pod: bool = False):
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return _mk(shape, axes)
+    return make_mesh(shape, axes)
 
 
 def make_debug_mesh(n_devices: int = 0, model: int = 2):
     """Small mesh over whatever devices exist (tests / examples)."""
     n = n_devices or len(jax.devices())
     model = min(model, n)
-    return _mk((n // model, model), ("data", "model"))
+    return make_mesh((n // model, model), ("data", "model"))

@@ -65,8 +65,8 @@ def _run_distributed(args) -> int:
         multispin as ms
     n = args.size
     nd = len(jax.devices())
-    mesh = jax.make_mesh((nd, 1), ("data", "model"),
-                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    from repro.launch.mesh import make_mesh
+    mesh = make_mesh((nd, 1), ("data", "model"))
     key = jax.random.PRNGKey(args.seed)
     full = lat.init_lattice(key, n, n)
     beta = jnp.float32(1.0 / args.temp)

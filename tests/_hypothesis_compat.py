@@ -1,0 +1,67 @@
+"""Use real hypothesis when installed; otherwise a tiny deterministic stand-in.
+
+The container the tier-1 suite runs in does not ship ``hypothesis`` (it is
+declared in requirements-dev.txt / pyproject.toml for dev machines and CI).
+So property tests import ``given/settings/st`` from this module: with
+hypothesis installed they get the real thing (shrinking, example database,
+edge-case generation); without it they get a seeded-random fallback that
+draws ``max_examples`` samples from the same strategy combinators --
+enough to keep the properties exercised everywhere.
+
+Only the strategy surface the test-suite uses is implemented:
+``integers``, ``floats``, ``booleans``, ``tuples``, and ``.map``.
+"""
+from __future__ import annotations
+
+try:
+    from hypothesis import given, settings, strategies as st  # noqa: F401
+except ModuleNotFoundError:
+    import random
+
+    class _Strategy:
+        def __init__(self, draw):
+            self.draw = draw
+
+        def map(self, fn):
+            return _Strategy(lambda r: fn(self.draw(r)))
+
+    class _Strategies:
+        @staticmethod
+        def integers(min_value, max_value):
+            return _Strategy(lambda r: r.randint(min_value, max_value))
+
+        @staticmethod
+        def floats(min_value, max_value):
+            return _Strategy(lambda r: r.uniform(min_value, max_value))
+
+        @staticmethod
+        def booleans():
+            return _Strategy(lambda r: r.random() < 0.5)
+
+        @staticmethod
+        def tuples(*strategies):
+            return _Strategy(
+                lambda r: tuple(s.draw(r) for s in strategies))
+
+    st = _Strategies()
+
+    def settings(max_examples: int = 20, **_ignored):
+        def deco(fn):
+            fn._max_examples = max_examples
+            return fn
+        return deco
+
+    def given(**strategies):
+        def deco(fn):
+            # NB: no functools.wraps -- the wrapper must expose a
+            # zero-parameter signature or pytest treats the strategy
+            # names as missing fixtures
+            def wrapper():
+                rng = random.Random(0xC0FFEE)
+                for _ in range(getattr(fn, "_max_examples", 20)):
+                    drawn = {k: s.draw(rng) for k, s in strategies.items()}
+                    fn(**drawn)
+            wrapper.__name__ = fn.__name__
+            wrapper.__doc__ = fn.__doc__
+            return wrapper
+        return deco

@@ -56,8 +56,8 @@ def test_elastic_reshard(tmp_path):
     ck = Checkpointer(str(tmp_path))
     t = _tree()
     ck.save(1, t)
-    mesh = jax.make_mesh((1,), ("data",),
-                         axis_types=(jax.sharding.AxisType.Auto,))
+    from repro.launch.mesh import make_mesh
+    mesh = make_mesh((1,), ("data",))
     sh = jax.tree.map(
         lambda _: jax.sharding.NamedSharding(
             mesh, jax.sharding.PartitionSpec()), t)
@@ -80,15 +80,14 @@ def test_elastic_reshard_across_device_counts():
         from repro.ckpt import Checkpointer
 
         d = tempfile.mkdtemp()
-        mesh8 = jax.make_mesh((8,), ("data",),
-            axis_types=(jax.sharding.AxisType.Auto,))
+        from repro.launch.mesh import make_mesh
+        mesh8 = make_mesh((8,), ("data",))
         t = {"w": jax.device_put(jnp.arange(64.0).reshape(8, 8),
                                  NamedSharding(mesh8, P("data", None)))}
         ck = Checkpointer(d)
         ck.save(1, t)
 
-        mesh4 = jax.make_mesh((4, 2), ("data", "model"),
-            axis_types=(jax.sharding.AxisType.Auto,) * 2)
+        mesh4 = make_mesh((4, 2), ("data", "model"))
         sh = {"w": NamedSharding(mesh4, P("model", "data"))}
         step, r = ck.restore(t, shardings=sh)
         assert step == 1

@@ -41,8 +41,8 @@ _SCRIPT = textwrap.dedent("""
     for shape, axes in [((2, 2, 2), ("pod", "data", "model")),
                         ((4, 2), ("data", "model")),
                         ((1, 8), ("data", "model"))]:
-        mesh = jax.make_mesh(shape, axes,
-            axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+        from repro.launch.mesh import make_mesh
+        mesh = make_mesh(shape, axes)
         step, sh = dist.make_ising_step(mesh, n=N, m=M, seed=5, n_sweeps=3)
         b1, w1 = step(jax.device_put(b, sh), jax.device_put(w, sh),
                       beta, jnp.uint32(0))

@@ -96,8 +96,8 @@ def test_3d_distributed_matches_physics():
         os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
         import jax, jax.numpy as jnp
         from repro.core import ising3d
-        mesh = jax.make_mesh((4, 2), ("data", "model"),
-            axis_types=(jax.sharding.AxisType.Auto,) * 2)
+        from repro.launch.mesh import make_mesh
+        mesh = make_mesh((4, 2), ("data", "model"))
         step, sh = ising3d.make_ising3d_step(mesh, n=16, seed=3, n_sweeps=40)
         full = jax.device_put(jnp.ones((16, 16, 16), jnp.int8), sh)
         out = step(full, jnp.float32(1 / 3.5), jnp.uint32(0))
