@@ -1,7 +1,11 @@
-"""Render EXPERIMENTS.md tables from results/dryrun.json.
+"""Render EXPERIMENTS.md tables from results/dryrun.json, and diff
+BENCH_<stamp>.json perf records.
 
 Usage: PYTHONPATH=src python -m benchmarks.report [path]
-Prints markdown for S Dry-run and S Roofline.
+       PYTHONPATH=src python -m benchmarks.report diff OLD.json NEW.json
+The first form prints markdown for S Dry-run and S Roofline; the second
+compares two `benchmarks/run.py --json` records with a % regression
+column (positive = NEW is slower).
 """
 import json
 import sys
@@ -34,6 +38,35 @@ def _model_flops_ratio(r):
     else:
         mf = model_flops(counts["active"], shape.global_batch, "fwd")
     return (mf / r["chips"]) / r["flops"] if r.get("flops") else None
+
+
+def diff(old_path, new_path):
+    """Markdown diff of two BENCH_<stamp>.json records by row name."""
+    with open(old_path) as f:
+        old = json.load(f)
+    with open(new_path) as f:
+        new = json.load(f)
+    old_rows = {r["name"]: r for r in old["rows"]}
+    new_rows = {r["name"]: r for r in new["rows"]}
+    print(f"### Bench diff — {old['meta'].get('stamp', old_path)} → "
+          f"{new['meta'].get('stamp', new_path)}\n")
+    print("| bench | old us/call | new us/call | Δ% | old flips/ns |"
+          " new flips/ns |")
+    print("|---|---|---|---|---|---|")
+    for name in sorted(set(old_rows) | set(new_rows)):
+        o, n = old_rows.get(name), new_rows.get(name)
+        if o is None or n is None:
+            status = "added" if o is None else "removed"
+            ou = "-" if o is None else f"{o['us_per_call']:.1f}"
+            nu = "-" if n is None else f"{n['us_per_call']:.1f}"
+            print(f"| {name} ({status}) | {ou} | {nu} | - | - | - |")
+            continue
+        ou, nu = o["us_per_call"], n["us_per_call"]
+        pct = (nu - ou) / ou * 100.0 if ou else float("nan")
+        of = o["derived"].get("flips_per_ns", "-")
+        nf = n["derived"].get("flips_per_ns", "-")
+        print(f"| {name} | {ou:.1f} | {nu:.1f} | {pct:+.1f}% | {of} |"
+              f" {nf} |")
 
 
 def main(path="results/dryrun.json"):
@@ -76,4 +109,7 @@ def main(path="results/dryrun.json"):
 
 
 if __name__ == "__main__":
-    main(*sys.argv[1:])
+    if len(sys.argv) > 1 and sys.argv[1] == "diff":
+        diff(*sys.argv[2:])
+    else:
+        main(*sys.argv[1:])

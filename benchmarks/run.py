@@ -32,8 +32,17 @@ def _timeit(fn, *args, iters=3, warmup=1):
     return (time.perf_counter() - t0) / iters, out
 
 
+# set in main(): a repro.analysis.RunRecorder; rows accumulate so --json
+# can write a BENCH_<stamp>.json perf record (EXPERIMENTS.md S Bench)
+_RECORDER = None
+
+
 def _row(name, us, derived):
-    print(f"{name},{us:.1f},{derived}")
+    if _RECORDER is None:  # bench called directly, outside main()
+        print(f"{name},{us:.1f},{derived}")
+        return
+    from repro.analysis.recorder import parse_derived
+    _RECORDER.record(name, us, **parse_derived(derived))
 
 
 # ---------------------------------------------------------------------------
@@ -153,6 +162,46 @@ def table5_packed_scaling(per_dev_rows=256, cols=1024, sweeps=5):
 
 
 # ---------------------------------------------------------------------------
+# Table 1 addendum: fused measure_scan vs legacy per-sample Python loop --
+# the dispatch-count win of the measurement subsystem (DESIGN.md S7)
+# ---------------------------------------------------------------------------
+
+def table1_measure_fusion(n=64, n_measure=64, sweeps_between=1):
+    from repro.analysis import measure as msr
+    from repro.analysis.measure import MeasurementPlan
+    from repro.core.sim import SimConfig, Simulation
+
+    cfg = dict(n=n, m=n, temperature=2.27, seed=5, engine="multispin")
+    spins = n * n * n_measure * sweeps_between
+
+    sim = Simulation(SimConfig(**cfg))
+
+    def legacy_loop():
+        # the pre-analysis-subsystem trajectory(): one device dispatch
+        # (and one host round-trip) per sample
+        out = np.empty(n_measure, np.float32)
+        for i in range(n_measure):
+            sim.run(sweeps_between)
+            out[i] = sim.magnetization()
+        return out
+
+    dt, _ = _timeit(legacy_loop, iters=2)
+    _row(f"t1_traj_loop_multispin_{n}", dt * 1e6,
+         f"dispatches={n_measure};us_per_sample={dt*1e6/n_measure:.1f};"
+         f"flips_per_ns={spins/dt/1e9:.4f}")
+
+    sim2 = Simulation(SimConfig(**cfg))
+    plan = MeasurementPlan(n_measure, sweeps_between, fields=("m",))
+    before = msr.DISPATCH_COUNT
+    dt, _ = _timeit(lambda: sim2.measure(plan)["m"], iters=2)
+    dispatches = (msr.DISPATCH_COUNT - before) / 3  # warmup + 2 iters
+    _row(f"t1_traj_scan_multispin_{n}", dt * 1e6,
+         f"dispatches={dispatches:.0f};"
+         f"us_per_sample={dt*1e6/n_measure:.1f};"
+         f"flips_per_ns={spins/dt/1e9:.4f}")
+
+
+# ---------------------------------------------------------------------------
 # Fig 5/6: physics validation vs Onsager
 # ---------------------------------------------------------------------------
 
@@ -215,18 +264,34 @@ def kernel_block_sweep(n=128, sweeps=3):
 
 
 def main() -> None:
+    global _RECORDER
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default="")
+    ap.add_argument("--json", nargs="?", const=".", default=None,
+                    metavar="DIR_OR_PATH",
+                    help="also write a BENCH_<stamp>.json perf record "
+                         "(diff two with benchmarks/report.py diff A B)")
     args, _ = ap.parse_known_args()
-    benches = [table1_single_device, table2_multispin_sizes,
-               table2_ensemble_batch, table3_weak_scaling,
-               table4_strong_scaling, table5_packed_scaling,
-               fig5_validation, kernel_block_sweep, roofline_summary]
-    print("name,us_per_call,derived")
+
+    from repro.analysis.recorder import RunRecorder
+    stamp = time.strftime("%Y%m%d_%H%M%S")
+    _RECORDER = RunRecorder(echo=True, meta={
+        "stamp": stamp, "backend": jax.default_backend(),
+        "device_count": jax.device_count(), "only": args.only})
+
+    benches = [table1_single_device, table1_measure_fusion,
+               table2_multispin_sizes, table2_ensemble_batch,
+               table3_weak_scaling, table4_strong_scaling,
+               table5_packed_scaling, fig5_validation, kernel_block_sweep,
+               roofline_summary]
     for b in benches:
         if args.only and args.only not in b.__name__:
             continue
         b()
+
+    if args.json is not None:
+        path = _RECORDER.write_json(args.json)
+        print(f"# wrote {path}")
 
 
 if __name__ == "__main__":

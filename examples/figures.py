@@ -1,0 +1,112 @@
+"""Reproduce the paper's validation figures end-to-end with error bars.
+
+Fig. 5: |m|(T) against Onsager's exact curve, with jackknife error bars,
+susceptibility chi, specific heat C_v, and tau_int per temperature.
+Fig. 6: Binder cumulant U_L(T) per lattice size and the U_L-crossing
+estimate of T_c (exact: 2/ln(1+sqrt(2)) = 2.269185).
+
+Every lattice size runs its whole temperature scan as ONE Ensemble whose
+measured trajectory is ONE fused ``measure_scan`` dispatch (observables
+inside the compiled scan -- repro.analysis, DESIGN.md S7).  Results are
+serialized by ``RunRecorder`` to the EXPERIMENTS.md CSV schema.
+
+Run:    PYTHONPATH=src python examples/figures.py [--smoke] [--out DIR]
+Smoke:  small lattices / short runs; asserts the Binder-crossing T_c
+        lands within 2% of the exact value (the CI physics gate).
+"""
+import argparse
+import dataclasses
+import os
+import sys
+import time
+
+import numpy as np
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+from repro.analysis import (MeasurementPlan, RunRecorder, binder,
+                            binder_crossing, jackknife, specific_heat,
+                            susceptibility, tau_int)
+from repro.core import observables as obs
+from repro.core.ensemble import Ensemble
+
+TEMPS = [1.5, 1.8, 2.0, 2.1, 2.15, 2.2, 2.25, 2.3, 2.35, 2.4, 2.5, 2.7,
+         3.0]
+
+
+def scan_size(L, temps, plan, engine, seed0, recorder):
+    """One lattice size: Ensemble over temps, fused measurement, rows."""
+    ens = Ensemble(n=L, m=L, temperatures=temps,
+                   seeds=[seed0 + i for i in range(len(temps))],
+                   engine=engine, init_p_up=1.0)
+    t0 = time.perf_counter()
+    traj = ens.measure(plan)                 # {"m","e"}: (n_measure, B)
+    us = (time.perf_counter() - t0) * 1e6 / len(temps)
+    n_spins = L * L
+    binders = []
+    for i, T in enumerate(temps):
+        m, e = traj["m"][:, i], traj["e"][:, i]
+        m_abs, m_err = jackknife(np.abs(m))
+        u, u_err = jackknife(m, stat=binder)
+        binders.append(u)
+        recorder.record(
+            f"fig5_L{L}_T{T:.3f}", us,
+            m=m_abs, m_err=m_err,
+            onsager=float(obs.onsager_magnetization(T)),
+            chi=susceptibility(m, T, n_spins),
+            cv=specific_heat(e, T, n_spins),
+            tau_int=tau_int(m))
+        recorder.record(f"fig6_L{L}_T{T:.3f}", us, binder=u,
+                        binder_err=u_err)
+    return np.asarray(binders)
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--smoke", action="store_true",
+                    help="small/fast run; assert T_c within 2% of exact")
+    ap.add_argument("--out", default="results", help="output directory")
+    ap.add_argument("--engine", default="multispin")
+    ap.add_argument("--sizes", type=int, nargs="*", default=None)
+    args = ap.parse_args(argv)
+
+    if args.smoke:
+        sizes = args.sizes or [16, 32]
+        plan = MeasurementPlan(n_measure=400, sweeps_between=2,
+                               thermalize=400)
+    else:
+        sizes = args.sizes or [32, 64]
+        plan = MeasurementPlan(n_measure=2000, sweeps_between=4,
+                               thermalize=1500)
+
+    rec = RunRecorder(echo=True, meta={
+        "figure": "fig5+fig6", "engine": args.engine, "sizes": sizes,
+        "temps": TEMPS, "plan": dataclasses.asdict(plan)})
+
+    u_by_size = {}
+    for k, L in enumerate(sizes):
+        u_by_size[L] = scan_size(L, TEMPS, plan, args.engine,
+                                 seed0=101 + 1000 * k, recorder=rec)
+
+    tc = binder_crossing(TEMPS, u_by_size[min(sizes)],
+                         u_by_size[max(sizes)])
+    rel = (abs(tc - obs.T_CRITICAL) / obs.T_CRITICAL
+           if tc is not None else float("nan"))
+    rec.record("fig6_tc_estimate", 0.0,
+               tc=float("nan") if tc is None else tc,
+               exact=obs.T_CRITICAL, rel_err=rel)
+
+    os.makedirs(args.out, exist_ok=True)
+    csv = rec.write_csv(os.path.join(args.out, "fig5_fig6.csv"))
+    print(f"# wrote {csv}")
+    print(f"# T_c estimate {tc} (exact {obs.T_CRITICAL}, "
+          f"rel err {rel:.4f})")
+    if args.smoke:
+        assert tc is not None and rel < 0.02, (
+            f"Binder-crossing T_c {tc} deviates {rel:.1%} from "
+            f"{obs.T_CRITICAL} (>2%)")
+        print("# smoke OK: T_c within 2% of exact")
+
+
+if __name__ == "__main__":
+    main()

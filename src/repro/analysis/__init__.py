@@ -1,0 +1,21 @@
+"""On-device measurement & host-side analysis subsystem (DESIGN.md S7).
+
+* ``measure``    -- MeasurementPlan / measure_scan: observables fused
+  into one compiled ``lax.scan`` per trajectory segment;
+* ``estimators`` -- Welford moments, blocking/jackknife error bars,
+  tau_int, susceptibility, specific heat, Binder crossing;
+* ``recorder``   -- RunRecorder: EXPERIMENTS.md CSV/JSON serialization.
+"""
+from .estimators import (Welford, autocorrelation, binder, binder_crossing,
+                         blocking_error, blocking_sems, effective_samples,
+                         jackknife, specific_heat, susceptibility, tau_int)
+from .measure import MeasurementPlan, measure_scan, measure_scan_batched
+from .recorder import RunRecorder, parse_derived
+
+__all__ = [
+    "MeasurementPlan", "measure_scan", "measure_scan_batched",
+    "Welford", "autocorrelation", "binder", "binder_crossing",
+    "blocking_error", "blocking_sems", "effective_samples", "jackknife",
+    "specific_heat", "susceptibility", "tau_int",
+    "RunRecorder", "parse_derived",
+]

@@ -1,0 +1,155 @@
+"""Fused on-device measurement: observables inside one compiled scan.
+
+The legacy measurement path (``Simulation.trajectory``) is a Python loop
+that issues one device dispatch per sample and round-trips every
+observable to the host; the TPU-cluster follow-up to the paper (Yang et
+al.) shows the measurement loop must be fused into the compiled update to
+stay accelerator-bound.  :func:`measure_scan` is that fusion: a
+``MeasurementPlan`` (how many samples, spaced how far apart) is compiled
+into ONE ``jax.lax.scan`` whose body advances the engine by
+``sweeps_between`` sweeps via the pure ``Engine.scan_step`` hook and
+records ``Engine.observables`` -- one dispatch per trajectory segment
+instead of one per sample, with bit-identical samples (DESIGN.md S7).
+
+Two entry points share the compiled body:
+
+* :func:`measure_scan`          -- single simulation; the seed is closed
+  over as a python int (full 64-bit Philox keys, exactly like the
+  stateful ``sweeps`` wrappers);
+* :func:`measure_scan_batched`  -- ``vmap`` over (state, inv_temp, seed)
+  for the :class:`~repro.core.ensemble.Ensemble` driver (counter-based
+  engines only, traced uint32 seeds).
+
+``DISPATCH_COUNT`` increments once per compiled-call invocation; tests
+and the fusion bench read it to assert the one-dispatch contract.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+#: number of compiled measure_scan dispatches issued so far (per process)
+DISPATCH_COUNT = 0
+
+
+@dataclasses.dataclass(frozen=True)
+class MeasurementPlan:
+    """A measurement schedule: ``n_measure`` samples, ``sweeps_between``
+    sweeps apart, after ``thermalize`` equilibration sweeps.
+
+    ``fields`` selects which keys of the engine ``observables`` hook are
+    recorded ("m" mean spin, "e" energy per spin).  Frozen + hashable:
+    the plan is the jit-cache key.
+    """
+
+    n_measure: int
+    sweeps_between: int
+    thermalize: int = 0
+    fields: Tuple[str, ...] = ("m", "e")
+
+    def __post_init__(self):
+        assert self.n_measure > 0 and self.sweeps_between > 0, self
+        assert self.thermalize >= 0, self
+        assert len(self.fields) > 0, "need at least one observable field"
+        object.__setattr__(self, "fields", tuple(self.fields))
+
+    @property
+    def total_sweeps(self) -> int:
+        return self.thermalize + self.n_measure * self.sweeps_between
+
+
+def _scan_body(engine, plan: MeasurementPlan):
+    """The traced trajectory: thermalize, then scan measure intervals."""
+
+    def run(state, inv_temp, seed, step0):
+        if plan.thermalize:
+            state = engine.scan_step(state, inv_temp, seed, step0,
+                                     plan.thermalize)
+            step0 = step0 + plan.thermalize
+
+        def body(carry, _):
+            st, step = carry
+            st = engine.scan_step(st, inv_temp, seed, step,
+                                  plan.sweeps_between)
+            step = step + plan.sweeps_between
+            o = engine.observables(st, inv_temp)
+            missing = set(plan.fields) - set(o)
+            if missing:
+                raise ValueError(
+                    f"plan fields {sorted(missing)} not in engine "
+                    f"{engine.name!r} observables {sorted(o)}")
+            sample = {k: jnp.asarray(o[k], jnp.float32)
+                      for k in plan.fields}
+            return (st, step), sample
+
+        (state, _), traj = jax.lax.scan(body, (state, step0), None,
+                                        length=plan.n_measure)
+        return state, traj
+
+    return run
+
+
+def _compiled(engine, plan: MeasurementPlan, batched: bool):
+    # cache lives on the engine instance (the CounterEngine._jit_cache
+    # pattern) so compiled executables die with the engine
+    cache = engine.__dict__.setdefault("_measure_scan_cache", {})
+    fn = cache.get((plan, batched))
+    if fn is None:
+        run = _scan_body(engine, plan)
+        if batched:
+            # (states, inv_temps, seeds) carry the batch axis; the sweep
+            # counter is shared -- every member is at the same step
+            fn = jax.jit(jax.vmap(run, in_axes=(0, 0, 0, None)))
+        else:
+            # close the python-int seed over the trace so counter-based
+            # engines keep full 64-bit Philox keys (same convention as
+            # the stateful CounterEngine.sweeps wrapper)
+            seed = engine.cfg.seed
+            fn = jax.jit(lambda st, beta, step0: run(st, beta, seed,
+                                                     step0))
+        cache[(plan, batched)] = fn
+    return fn
+
+
+def _bump() -> None:
+    global DISPATCH_COUNT
+    DISPATCH_COUNT += 1
+
+
+def measure_scan(engine, state, plan: MeasurementPlan, step_count: int = 0):
+    """Run ``plan`` on a single simulation state in one compiled dispatch.
+
+    Returns ``(final_state, {field: (n_measure,) float32 ndarray},
+    new_step_count)``.  Samples are bit-identical to the legacy python
+    loop ``run(sweeps_between); measure()`` repeated ``n_measure`` times
+    (tested in tests/test_analysis.py).
+    """
+    fn = _compiled(engine, plan, batched=False)
+    state, traj = fn(state, jnp.float32(engine.cfg.inv_temp),
+                     jnp.int32(step_count))
+    _bump()
+    traj = {k: np.asarray(v) for k, v in traj.items()}
+    return state, traj, step_count + plan.total_sweeps
+
+
+def measure_scan_batched(engine, states, inv_temps, seeds,
+                         plan: MeasurementPlan, step_count: int = 0):
+    """Batched :func:`measure_scan` over (state, inv_temp, seed) members.
+
+    Returns ``(final_states, {field: (n_measure, B) ndarray},
+    new_step_count)`` -- trajectory-major, matching the legacy
+    ``Ensemble.trajectory`` shape.
+    """
+    if not engine.counter_based:
+        raise ValueError(
+            f"engine {engine.name!r} is not counter-based; batched "
+            "measurement needs a traceable-seed sweep (DESIGN.md S3/S4)")
+    fn = _compiled(engine, plan, batched=True)
+    states, traj = fn(states, inv_temps, seeds, jnp.int32(step_count))
+    _bump()
+    traj = {k: np.asarray(v).T for k, v in traj.items()}  # (B, n) -> (n, B)
+    return states, traj, step_count + plan.total_sweeps

@@ -1,0 +1,87 @@
+"""RunRecorder: results in the EXPERIMENTS.md CSV schema, plus JSON.
+
+One row per measurement: ``name,us_per_call,derived`` where ``derived``
+is ``;``-separated ``key=value`` pairs (EXPERIMENTS.md S Bench).  The
+recorder is the single serialization point shared by the benchmark
+harness (``benchmarks/run.py``) and the figure reproduction
+(``examples/figures.py``): rows can be echoed to stdout as they arrive,
+written to a ``.csv``, and dumped as a machine-diffable JSON record
+(``benchmarks/report.py diff`` consumes two of those).
+"""
+from __future__ import annotations
+
+import json
+import os
+import time
+from typing import Dict, List, Optional
+
+HEADER = "name,us_per_call,derived"
+
+
+def _fmt(v) -> str:
+    if isinstance(v, float):
+        return f"{v:.6g}"
+    return str(v)
+
+
+def parse_derived(derived: str) -> Dict[str, object]:
+    """'k1=v1;k2=v2' -> dict, floating values parsed where possible."""
+    out: Dict[str, object] = {}
+    for part in derived.split(";"):
+        if not part or "=" not in part:
+            continue
+        k, v = part.split("=", 1)
+        try:
+            out[k] = float(v)
+        except ValueError:
+            out[k] = v
+    return out
+
+
+class RunRecorder:
+    """Accumulates ``(name, us_per_call, derived)`` rows."""
+
+    def __init__(self, echo: bool = False, meta: Optional[dict] = None):
+        self.rows: List[dict] = []
+        self.echo = echo
+        self.meta = dict(meta or {})
+        if echo:
+            print(HEADER)
+
+    def record(self, name: str, us_per_call: float = 0.0,
+               **derived) -> dict:
+        row = {"name": name, "us_per_call": float(us_per_call),
+               "derived": {k: v for k, v in derived.items()}}
+        self.rows.append(row)
+        if self.echo:
+            print(self.format_row(row))
+        return row
+
+    @staticmethod
+    def format_row(row: dict) -> str:
+        derived = ";".join(f"{k}={_fmt(v)}"
+                           for k, v in row["derived"].items())
+        return f"{row['name']},{row['us_per_call']:.1f},{derived}"
+
+    def write_csv(self, path: str) -> str:
+        os.makedirs(os.path.dirname(path) or ".", exist_ok=True)
+        with open(path, "w") as f:
+            f.write(HEADER + "\n")
+            for row in self.rows:
+                f.write(self.format_row(row) + "\n")
+        return path
+
+    def write_json(self, path: str) -> str:
+        """Full record (meta + rows) as JSON.  Any path not ending in
+        ``.json`` is treated as a directory (created if missing) and
+        gets a ``BENCH_<stamp>.json`` filename, the perf-record
+        convention -- so ``--json results`` works in a fresh checkout."""
+        if not path.endswith(".json"):
+            stamp = self.meta.get("stamp") or time.strftime(
+                "%Y%m%d_%H%M%S")
+            path = os.path.join(path, f"BENCH_{stamp}.json")
+        os.makedirs(os.path.dirname(path) or ".", exist_ok=True)
+        with open(path, "w") as f:
+            json.dump({"meta": self.meta, "rows": self.rows}, f,
+                      indent=1, sort_keys=True)
+        return path

@@ -23,6 +23,20 @@ offset), cuRAND semantics -- DESIGN.md S4) additionally expose
 ``sweep_fn(state, inv_temp, seed, start_offset, n_sweeps)``: a pure
 function with *traceable* seed and temperature, which is what the
 ensemble driver ``vmap``s over a (temperature, seed) batch axis.
+
+Two hooks added for the measurement subsystem (DESIGN.md S7):
+
+* ``observables(state, inv_temp)`` -- pure, trace/vmap-safe map of the
+  engine-native state to ``{"m": mean spin, "e": energy/spin}``; the
+  default routes through ``full_lattice``, so it is correct for every
+  layout (packed words, tensor-core planes, ...) -- engines with a
+  cheaper or physically different path (spin glass) override it;
+* ``scan_step(state, inv_temp, seed, step_count, n_sweeps)`` -- pure
+  version of ``sweeps`` with a *traceable* cumulative-sweep counter, the
+  unit that ``repro.analysis.measure.measure_scan`` chains inside one
+  ``jax.lax.scan``.  ``sweeps`` (the stateful wrapper) and ``scan_step``
+  must draw the same random stream or trajectories would fork between
+  the legacy per-sample loop and the fused scan (tested bit-exact).
 """
 from __future__ import annotations
 
@@ -90,11 +104,27 @@ class Engine:
         return obs.magnetization(b, w)
 
     def energy(self, state):
-        b, w = lat.split_checkerboard(self.full_lattice(state))
-        return obs.energy_per_spin(b, w)
+        return self.observables(state, jnp.float32(self.cfg.inv_temp))["e"]
+
+    def observables(self, state, inv_temp):
+        """Pure, trace/vmap-safe observables of the engine-native state.
+
+        Returns ``{"m": mean spin, "e": energy per spin}``.  The default
+        goes through ``full_lattice``, which is layout-correct for every
+        engine; ``inv_temp`` is part of the contract so engines can add
+        temperature-dependent observables without changing call sites.
+        """
+        full = self.full_lattice(state)
+        return {"m": obs.magnetization_full(full),
+                "e": obs.energy_per_spin_full(full)}
 
     # -- dynamics -----------------------------------------------------------
     def sweeps(self, state, n_sweeps: int, step_count: int):
+        raise NotImplementedError
+
+    def scan_step(self, state, inv_temp, seed, step_count, n_sweeps: int):
+        """Pure ``sweeps``: advance ``n_sweeps`` (static) from a traceable
+        cumulative ``step_count``; must reproduce ``sweeps`` bit-for-bit."""
         raise NotImplementedError
 
     # -- checkpointing ------------------------------------------------------
@@ -140,6 +170,10 @@ class CounterEngine(Engine):
 
         return jax.lax.fori_loop(0, n_sweeps, body, tuple(state))
 
+    def scan_step(self, state, inv_temp, seed, step_count, n_sweeps: int):
+        # one half-sweep offset per color: cumulative offset = 2 * sweeps
+        return self.sweep_fn(state, inv_temp, seed, 2 * step_count, n_sweeps)
+
     def sweeps(self, state, n_sweeps: int, step_count: int):
         fn = self._jit_cache.get(n_sweeps)
         if fn is None:
@@ -180,12 +214,14 @@ class BasicEngine(_PlanesEngine):
 
     name = "basic"
 
-    def sweeps(self, state, n_sweeps, step_count):
-        key = jax.random.fold_in(jax.random.PRNGKey(self.cfg.seed),
-                                 step_count)
-        b, w, _ = metro.run_sweeps(*state, jnp.float32(self.cfg.inv_temp),
-                                   key, n_sweeps)
+    def scan_step(self, state, inv_temp, seed, step_count, n_sweeps):
+        key = jax.random.fold_in(jax.random.PRNGKey(seed), step_count)
+        b, w, _ = metro.run_sweeps(*state, inv_temp, key, n_sweeps)
         return (b, w)
+
+    def sweeps(self, state, n_sweeps, step_count):
+        return self.scan_step(state, jnp.float32(self.cfg.inv_temp),
+                              self.cfg.seed, step_count, n_sweeps)
 
 
 @register
@@ -283,12 +319,15 @@ class TensorCoreEngine(Engine):
         m = sum(p.astype(jnp.float32).sum() for p in state.values())
         return m / (self.cfg.n * self.cfg.m)
 
-    def sweeps(self, state, n_sweeps, step_count):
-        key = jax.random.fold_in(jax.random.PRNGKey(self.cfg.seed),
-                                 step_count)
-        planes, _ = tc.run_sweeps_tc(state, jnp.float32(self.cfg.inv_temp),
-                                     key, n_sweeps, block=self.cfg.tc_block)
+    def scan_step(self, state, inv_temp, seed, step_count, n_sweeps):
+        key = jax.random.fold_in(jax.random.PRNGKey(seed), step_count)
+        planes, _ = tc.run_sweeps_tc(state, inv_temp, key, n_sweeps,
+                                     block=self.cfg.tc_block)
         return planes
+
+    def sweeps(self, state, n_sweeps, step_count):
+        return self.scan_step(state, jnp.float32(self.cfg.inv_temp),
+                              self.cfg.seed, step_count, n_sweeps)
 
     def state_arrays(self, state):
         return {f"plane_{k}": np.asarray(v) for k, v in state.items()}
@@ -314,13 +353,19 @@ class WolffEngine(Engine):
     def full_lattice(self, state):
         return state
 
-    def sweeps(self, state, n_sweeps, step_count):
-        key = jax.random.fold_in(jax.random.PRNGKey(self.cfg.seed),
-                                 step_count)
+    def scan_step(self, state, inv_temp, seed, step_count, n_sweeps):
+        # cfg.temperature, not 1/inv_temp: the float32 round trip can land
+        # 1 ulp off, which would fork the scan path from ``sweeps``; wolff
+        # is key-based so it is never vmapped over an inv_temp batch
+        key = jax.random.fold_in(jax.random.PRNGKey(seed), step_count)
         new, _ = wolff_mod.run_wolff(key, state,
                                      jnp.float32(self.cfg.temperature),
                                      n_sweeps)
         return new
+
+    def sweeps(self, state, n_sweeps, step_count):
+        return self.scan_step(state, jnp.float32(self.cfg.inv_temp),
+                              self.cfg.seed, step_count, n_sweeps)
 
     def state_arrays(self, state):
         return {"lattice": np.asarray(state)}
@@ -361,17 +406,21 @@ class SpinGlassEngine(Engine):
     def magnetization(self, state):
         return state[0].astype(jnp.float32).mean()
 
-    def energy(self, state):
-        return sg.energy_per_spin(*state)
+    def observables(self, state, inv_temp):
+        # energy must weight every bond by its quenched coupling; the
+        # layout-generic full-lattice default would silently assume J=+1
+        return {"m": obs.magnetization_full(state[0]),
+                "e": sg.energy_per_spin(*state)}
+
+    def scan_step(self, state, inv_temp, seed, step_count, n_sweeps):
+        full, j_up, j_left = state
+        key = jax.random.fold_in(jax.random.PRNGKey(seed), step_count)
+        full, _ = sg.run_sweeps(full, j_up, j_left, inv_temp, key, n_sweeps)
+        return (full, j_up, j_left)
 
     def sweeps(self, state, n_sweeps, step_count):
-        full, j_up, j_left = state
-        key = jax.random.fold_in(jax.random.PRNGKey(self.cfg.seed),
-                                 step_count)
-        full, _ = sg.run_sweeps(full, j_up, j_left,
-                                jnp.float32(self.cfg.inv_temp), key,
-                                n_sweeps)
-        return (full, j_up, j_left)
+        return self.scan_step(state, jnp.float32(self.cfg.inv_temp),
+                              self.cfg.seed, step_count, n_sweeps)
 
     def state_arrays(self, state):
         return {"lattice": np.asarray(state[0]),

@@ -108,12 +108,23 @@ class Ensemble:
         """(B, N, M) stacked +-1 lattices (measurement/debug view)."""
         return np.asarray(self._full_lattices(self.states))
 
+    def measure(self, plan) -> dict:
+        """Run a :class:`repro.analysis.MeasurementPlan` on every member
+        in ONE vmapped, compiled dispatch (DESIGN.md S7).
+
+        Returns ``{field: (n_measure, B) float32 ndarray}``.
+        """
+        from repro.analysis.measure import measure_scan_batched
+        self.states, traj, self.step_count = measure_scan_batched(
+            self.engine, self.states, self.inv_temps, self.seeds, plan,
+            step_count=self.step_count)
+        return traj
+
     def trajectory(self, n_measure: int, sweeps_between: int,
                    thermalize: int = 0) -> np.ndarray:
-        """(n_measure, B) magnetization samples along the trajectory."""
-        if thermalize:
-            self.run(thermalize)
-        out = np.empty((n_measure, self.size), np.float32)
-        for i in range(n_measure):
-            out[i] = self.run(sweeps_between)
-        return out
+        """(n_measure, B) magnetization samples along the trajectory --
+        the whole measured trajectory is one compiled dispatch."""
+        from repro.analysis.measure import MeasurementPlan
+        plan = MeasurementPlan(n_measure, sweeps_between, thermalize,
+                               fields=("m",))
+        return self.measure(plan)["m"]

@@ -20,12 +20,32 @@ def magnetization(black: jax.Array, white: jax.Array) -> jax.Array:
     return s / (black.size + white.size)
 
 
+def magnetization_full(full: jax.Array) -> jax.Array:
+    """Mean spin of an (N, M) +-1 lattice.
+
+    Sums of +-1 are exact in float32 up to 2^24 spins, so this equals the
+    plane-wise :func:`magnetization` bit-for-bit regardless of layout.
+    """
+    return full.astype(jnp.float32).sum() / full.size
+
+
+def energy_per_spin_full(full: jax.Array) -> jax.Array:
+    """H / (J N_spins) = -(1/N) sum_<ij> sigma_i sigma_j (each bond once).
+
+    Layout-independent: one roll per axis counts every vertical and
+    horizontal bond exactly once, so the same expression is correct for
+    any engine's ``full_lattice`` view (the engine ``observables`` hook
+    routes here -- DESIGN.md S7).
+    """
+    s = full.astype(jnp.float32)
+    e = -(s * jnp.roll(s, 1, axis=0)).sum() - (s * jnp.roll(s, 1, axis=1)).sum()
+    return e / full.size
+
+
 def energy_per_spin(black, white) -> jax.Array:
-    """H / (J N_spins) = -(1/N) sum_<ij> sigma_i sigma_j (each bond once)."""
-    from . import metropolis as metro
-    nn_b = metro.neighbor_sums(white, is_black=True)
-    e = -(black.astype(jnp.float32) * nn_b).sum()  # every bond exactly once
-    return e / (black.size + white.size)
+    """Energy per spin from compact color planes (merges, then sums bonds)."""
+    from . import lattice as lat
+    return energy_per_spin_full(lat.merge_checkerboard(black, white))
 
 
 def onsager_magnetization(temperature, j: float = 1.0):

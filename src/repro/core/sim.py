@@ -69,16 +69,25 @@ class Simulation:
     def energy(self) -> float:
         return float(self.engine.energy(self.state))
 
+    def measure(self, plan) -> dict:
+        """Run a :class:`repro.analysis.MeasurementPlan` in ONE compiled
+        dispatch (observables fused into the sweep scan -- DESIGN.md S7).
+
+        Returns ``{field: (n_measure,) float32 ndarray}``.
+        """
+        from repro.analysis.measure import measure_scan
+        self.state, traj, self.step_count = measure_scan(
+            self.engine, self.state, plan, step_count=self.step_count)
+        return traj
+
     def trajectory(self, n_measure: int, sweeps_between: int,
                    thermalize: int = 0) -> np.ndarray:
-        """Run and collect magnetization samples."""
-        if thermalize:
-            self.run(thermalize)
-        out = np.empty(n_measure, np.float32)
-        for i in range(n_measure):
-            self.run(sweeps_between)
-            out[i] = self.magnetization()
-        return out
+        """Magnetization samples via the fused scan: one device dispatch
+        per trajectory, bit-identical to the legacy per-sample loop."""
+        from repro.analysis.measure import MeasurementPlan
+        plan = MeasurementPlan(n_measure, sweeps_between, thermalize,
+                               fields=("m",))
+        return self.measure(plan)["m"]
 
     # -- fault tolerance ---------------------------------------------------
     def save(self, path: str) -> None:

@@ -1,0 +1,254 @@
+"""Measurement & analysis subsystem: fused scan contract + estimators."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.analysis import (MeasurementPlan, RunRecorder, Welford, binder,
+                            binder_crossing, blocking_error, jackknife,
+                            parse_derived, specific_heat, susceptibility,
+                            tau_int)
+from repro.analysis import measure as msr
+from repro.core import observables as obs
+from repro.core.engine import ENGINES
+from repro.core.ensemble import Ensemble
+from repro.core.sim import SimConfig, Simulation
+
+# ---------------------------------------------------------------------------
+# fused scan: bit-identity with the legacy python loop, one dispatch
+# ---------------------------------------------------------------------------
+
+
+def _legacy_trajectory(sim, n_measure, sweeps_between, thermalize=0):
+    """The pre-analysis-subsystem measurement loop: one dispatch and one
+    host round-trip per sample."""
+    if thermalize:
+        sim.run(thermalize)
+    out = np.empty(n_measure, np.float32)
+    for i in range(n_measure):
+        sim.run(sweeps_between)
+        out[i] = sim.magnetization()
+    return out
+
+
+@pytest.mark.parametrize("engine", ["multispin", "basic_philox"])
+def test_scan_trajectory_bitexact_vs_python_loop(engine):
+    cfg = dict(n=16, m=16, temperature=2.2, seed=7, engine=engine)
+    a = Simulation(SimConfig(**cfg))
+    legacy = _legacy_trajectory(a, 12, 2, thermalize=4)
+    b = Simulation(SimConfig(**cfg))
+    scan = b.trajectory(12, 2, thermalize=4)
+    np.testing.assert_array_equal(legacy, scan)
+    # the final engine states agree too, so a checkpoint after a fused
+    # measurement continues the identical Philox stream
+    np.testing.assert_array_equal(np.asarray(a.full_lattice()),
+                                  np.asarray(b.full_lattice()))
+    assert a.step_count == b.step_count == 4 + 12 * 2
+
+
+def test_scan_trajectory_is_one_dispatch():
+    sim = Simulation(SimConfig(n=16, m=16, temperature=2.0, seed=1,
+                               engine="multispin"))
+    before = msr.DISPATCH_COUNT
+    sim.trajectory(32, 2, thermalize=8)
+    assert msr.DISPATCH_COUNT - before == 1  # legacy loop: 33 dispatches
+
+
+def test_measure_fields_and_step_accounting():
+    sim = Simulation(SimConfig(n=16, m=16, temperature=2.0, seed=2,
+                               engine="basic_philox"))
+    plan = MeasurementPlan(n_measure=5, sweeps_between=3, thermalize=4)
+    traj = sim.measure(plan)
+    assert set(traj) == {"m", "e"}
+    assert traj["m"].shape == traj["e"].shape == (5,)
+    assert traj["m"].dtype == np.float32
+    assert sim.step_count == plan.total_sweeps == 4 + 5 * 3
+
+
+def test_ensemble_measure_matches_member_simulations():
+    temps, seeds = [1.8, 2.5], [3, 4]
+    ens = Ensemble(16, 16, temps, seeds, engine="multispin")
+    traj = ens.trajectory(6, 2, thermalize=2)
+    assert traj.shape == (6, 2)
+    for i, (T, s) in enumerate(zip(temps, seeds)):
+        sim = Simulation(SimConfig(n=16, m=16, temperature=T, seed=s,
+                                   engine="multispin"))
+        np.testing.assert_array_equal(sim.trajectory(6, 2, thermalize=2),
+                                      traj[:, i], err_msg=f"member {i}")
+
+
+def test_measurement_plan_validation():
+    with pytest.raises(AssertionError):
+        MeasurementPlan(0, 1)
+    with pytest.raises(AssertionError):
+        MeasurementPlan(1, 1, thermalize=-1)
+    assert MeasurementPlan(1, 1, fields=["m"]).fields == ("m",)
+
+
+# ---------------------------------------------------------------------------
+# engine observables hook: energy correct for every state layout
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("engine", sorted(ENGINES))
+def test_observables_hook_energy_ground_state(engine):
+    """All-up lattice: e = -2 for every uniform-J engine (each spin has 4
+    aligned bonds counted once per pair); spinglass weights its quenched
+    couplings instead, so e = -<J> over bonds."""
+    cfg = SimConfig(n=16, m=16, temperature=2.0, seed=5, engine=engine,
+                    tc_block=4)
+    sim = Simulation(cfg)
+    state = sim.engine.from_full(jnp.ones((16, 16), jnp.int8))
+    o = sim.engine.observables(state, jnp.float32(cfg.inv_temp))
+    assert float(o["m"]) == 1.0
+    if engine == "spinglass":
+        _, j_up, j_left = state
+        expect = -(np.asarray(j_up, np.float32).sum()
+                   + np.asarray(j_left, np.float32).sum()) / 256.0
+        assert float(o["e"]) == pytest.approx(expect)
+    else:
+        assert float(o["e"]) == -2.0
+
+
+@pytest.mark.parametrize("engine", sorted(ENGINES))
+def test_sim_energy_routes_through_hook(engine):
+    sim = Simulation(SimConfig(n=16, m=16, temperature=2.0, seed=6,
+                               engine=engine, tc_block=4))
+    sim.run(2)
+    hook = float(sim.engine.observables(
+        sim.state, jnp.float32(sim.config.inv_temp))["e"])
+    assert sim.energy() == hook
+    # layout-independent oracle on the full-lattice view
+    if engine != "spinglass":
+        full = sim.full_lattice()
+        assert hook == float(obs.energy_per_spin_full(full))
+
+
+# ---------------------------------------------------------------------------
+# estimators
+# ---------------------------------------------------------------------------
+
+
+def test_welford_matches_numpy_and_merges():
+    rng = np.random.default_rng(0)
+    x = rng.normal(2.0, 3.0, size=10_000)
+    w = Welford().push(x[:3000])
+    w.merge(Welford().push(x[3000:]))
+    assert w.n == x.size
+    assert w.mean == pytest.approx(x.mean(), rel=1e-12)
+    assert w.var == pytest.approx(x.var(ddof=1), rel=1e-9)
+    assert w.sq_mean == pytest.approx((x ** 2).mean(), rel=1e-12)
+    assert w.quad_mean == pytest.approx((x ** 4).mean(), rel=1e-12)
+    assert w.abs_mean == pytest.approx(np.abs(x).mean(), rel=1e-12)
+
+
+def test_tau_int_recovers_ar1_autocorrelation():
+    """AR(1) with coefficient phi has tau_int = (1 + phi) / (1 - phi)."""
+    rng = np.random.default_rng(1)
+    phi, n = 0.7, 200_000
+    x = np.empty(n)
+    x[0] = 0.0
+    noise = rng.normal(size=n)
+    for t in range(1, n):
+        x[t] = phi * x[t - 1] + noise[t]
+    expect = (1 + phi) / (1 - phi)   # ~5.67
+    assert tau_int(x) == pytest.approx(expect, rel=0.15)
+    # iid series: tau_int ~ 1
+    assert tau_int(rng.normal(size=50_000)) == pytest.approx(1.0,
+                                                             abs=0.15)
+
+
+def test_jackknife_and_blocking_errors_shrink_as_sqrt_n():
+    """On iid data both error bars track sigma/sqrt(N): averaging over
+    independent realizations, err(16N)/err(N) ~ 1/4."""
+    rng = np.random.default_rng(2)
+
+    def mean_err(estimator, n, reps=30):
+        return np.mean([estimator(rng.normal(size=n)) for _ in range(reps)])
+
+    for est in (lambda s: jackknife(s)[1], blocking_error):
+        e_small = mean_err(est, 1_000)
+        e_big = mean_err(est, 16_000)
+        assert e_small / e_big == pytest.approx(4.0, rel=0.25), est
+    # and the absolute scale is sigma/sqrt(N)
+    assert mean_err(lambda s: jackknife(s)[1], 4_000) == pytest.approx(
+        1.0 / np.sqrt(4_000), rel=0.2)
+
+
+def test_jackknife_mean_is_plain_mean():
+    x = np.arange(100, dtype=np.float64)
+    est, err = jackknife(x)
+    assert est == pytest.approx(x.mean())
+    assert err > 0
+
+
+def test_chi_and_cv_nonnegative_on_simulation_data():
+    sim = Simulation(SimConfig(n=16, m=16, temperature=2.3, seed=9,
+                               engine="multispin"))
+    traj = sim.measure(MeasurementPlan(64, 1, thermalize=50))
+    chi = susceptibility(traj["m"], 2.3, 256)
+    cv = specific_heat(traj["e"], 2.3, 256)
+    assert chi >= 0.0 and cv >= 0.0
+    assert np.isfinite(chi) and np.isfinite(cv)
+    # adversarial inputs cannot push them negative either
+    rng = np.random.default_rng(3)
+    for _ in range(20):
+        s = rng.normal(size=32)
+        assert susceptibility(s, 2.0, 64) >= 0.0
+        assert specific_heat(s, 2.0, 64) >= 0.0
+
+
+def test_binder_limits_and_crossing():
+    # ordered phase: constant |m| -> U = 2/3; gaussian m -> U = 0
+    assert binder(np.full(500, 0.8)) == pytest.approx(2.0 / 3.0)
+    rng = np.random.default_rng(4)
+    assert binder(rng.normal(size=400_000)) == pytest.approx(0.0,
+                                                             abs=0.02)
+    t = [2.0, 2.2, 2.4, 2.6]
+    assert binder_crossing(t, [0.60, 0.50, 0.40, 0.30],
+                           [0.65, 0.55, 0.35, 0.20]) == pytest.approx(2.3)
+    assert binder_crossing(t, [0.6, 0.5, 0.4, 0.3],
+                           [0.7, 0.6, 0.5, 0.4]) is None
+
+
+def test_binder_crossing_brackets_tc_on_ensemble_scan():
+    """Small two-size Ensemble scan: the U_L crossing lands near the
+    exact T_c = 2.269185 (the examples/figures.py physics gate at
+    sub-smoke scale)."""
+    temps = [2.0, 2.1, 2.2, 2.3, 2.4, 2.6]
+    plan = MeasurementPlan(n_measure=150, sweeps_between=2,
+                           thermalize=200)
+    u = {}
+    for k, L in enumerate((16, 32)):
+        ens = Ensemble(n=L, m=L, temperatures=temps,
+                       seeds=[41 + 100 * k + i for i in range(len(temps))],
+                       engine="multispin", init_p_up=1.0)
+        m = ens.measure(plan)["m"]
+        u[L] = [binder(m[:, i]) for i in range(len(temps))]
+    tc = binder_crossing(temps, u[16], u[32])
+    assert tc is not None
+    assert abs(tc - obs.T_CRITICAL) < 0.15, (tc, u)
+
+
+# ---------------------------------------------------------------------------
+# recorder
+# ---------------------------------------------------------------------------
+
+
+def test_recorder_csv_schema_and_json_roundtrip(tmp_path):
+    rec = RunRecorder(meta={"stamp": "test"})
+    rec.record("fig5_L16_T2.000", 12.5, m=0.91234567, m_err=0.0123,
+               note="x")
+    row = rec.format_row(rec.rows[0])
+    assert row == "fig5_L16_T2.000,12.5,m=0.912346;m_err=0.0123;note=x"
+    assert parse_derived(row.split(",", 2)[2]) == {
+        "m": 0.912346, "m_err": 0.0123, "note": "x"}
+    csv = rec.write_csv(str(tmp_path / "out.csv"))
+    lines = open(csv).read().splitlines()
+    assert lines[0] == "name,us_per_call,derived" and lines[1] == row
+    jpath = rec.write_json(str(tmp_path) + "/")
+    assert "BENCH_test.json" in jpath
+    import json
+    with open(jpath) as f:
+        data = json.load(f)
+    assert data["rows"][0]["name"] == "fig5_L16_T2.000"
+    assert data["meta"]["stamp"] == "test"
