@@ -53,20 +53,48 @@ def _row(name, us, derived):
 # wolff excluded: a "sweep" (one cluster flip) is not comparable in
 # flips/ns; spinglass/stencil run but have no paper column (EXPERIMENTS.md)
 T1_ENGINES = ("basic", "basic_philox", "multispin", "tensorcore",
-              "stencil_pallas", "spinglass")
+              "stencil_pallas", "spinglass", "bitplane")
+
+# set in main() by --engines: restricts engine benches to a name subset
+_ENGINE_FILTER = ()
+
+
+def _engine_selected(name):
+    return not _ENGINE_FILTER or name in _ENGINE_FILTER
+
+
+def _rebind_stepper(advance, state):
+    """Timing closure that REBINDS the state each call: the sweep paths
+    donate their state buffers (EXPERIMENTS.md H1.8), so reusing a
+    passed-in buffer across timed calls would hit a deleted array."""
+    box = [state]
+
+    def step():
+        box[0] = advance(box[0])
+        return box[0]
+
+    return step
+
+
+def _sweep_stepper(eng, state, sweeps):
+    return _rebind_stepper(lambda s: eng.sweeps(s, sweeps, 0), state)
 
 
 def table1_single_device(n=256, sweeps=10):
-    from repro.core.engine import make_engine
+    from repro.core.engine import ENGINES, make_engine
     from repro.core.sim import SimConfig
     spins = n * n * sweeps
     for name in T1_ENGINES:
+        if not _engine_selected(name):
+            continue
         cfg = SimConfig(n=n, m=n, temperature=2.27, seed=1, engine=name,
                         tc_block=64)
         eng = make_engine(cfg)
         state = eng.init_state(jax.random.PRNGKey(0))
-        dt, _ = _timeit(lambda: eng.sweeps(state, sweeps, 0))
-        _row(f"t1_{name}", dt * 1e6, f"flips_per_ns={spins/dt/1e9:.4f}")
+        dt, _ = _timeit(_sweep_stepper(eng, state, sweeps))
+        reps = ENGINES[name].replicas
+        _row(f"t1_{name}", dt * 1e6,
+             f"flips_per_ns={reps*spins/dt/1e9:.4f}")
 
 
 # ---------------------------------------------------------------------------
@@ -80,9 +108,10 @@ def table2_multispin_sizes(sweeps=5):
     beta = jnp.float32(1 / 1.5)
     for n in (128, 256, 512, 1024):
         full = lat.init_lattice(key, n, n)
-        bw, ww = ms.pack_lattice(*lat.split_checkerboard(full))
-        dt, _ = _timeit(lambda: ms.run_sweeps_packed(bw, ww, beta, sweeps,
-                                                     seed=1), iters=2)
+        step = _rebind_stepper(
+            lambda s: ms.run_sweeps_packed(*s, beta, sweeps, seed=1),
+            ms.pack_lattice(*lat.split_checkerboard(full)))
+        dt, _ = _timeit(step, iters=2)
         _row(f"t2_multispin_{n}x{n}", dt * 1e6,
              f"flips_per_ns={n*n*sweeps/dt/1e9:.4f}")
 
@@ -119,8 +148,10 @@ def table3_weak_scaling(per_dev_rows=256, cols=512, sweeps=5):
         mesh = _mesh(nd)
         step, sh = dist.make_ising_step(mesh, n=n, m=cols, seed=3,
                                         n_sweeps=sweeps)
-        bs, ws = jax.device_put(b, sh), jax.device_put(w, sh)
-        dt, _ = _timeit(lambda: step(bs, ws, beta, jnp.uint32(0)), iters=2)
+        tick = _rebind_stepper(
+            lambda s: step(*s, beta, jnp.uint32(0)),
+            (jax.device_put(b, sh), jax.device_put(w, sh)))
+        dt, _ = _timeit(tick, iters=2)
         _row(f"t3_weak_basic_{nd}dev", dt * 1e6,
              f"flips_per_ns={n*cols*sweeps/dt/1e9:.4f}")
 
@@ -135,8 +166,12 @@ def table4_strong_scaling(n=1024, cols=512, sweeps=5):
         mesh = _mesh(nd)
         step, sh = dist.make_ising_step(mesh, n=n, m=cols, seed=3,
                                         n_sweeps=sweeps)
-        bs, ws = jax.device_put(b, sh), jax.device_put(w, sh)
-        dt, _ = _timeit(lambda: step(bs, ws, beta, jnp.uint32(0)), iters=2)
+        # copies: b/w are reused across meshes, the step donates, and
+        # device_put may alias on the 1-device mesh (H1.8)
+        tick = _rebind_stepper(
+            lambda s: step(*s, beta, jnp.uint32(0)),
+            (jax.device_put(b.copy(), sh), jax.device_put(w.copy(), sh)))
+        dt, _ = _timeit(tick, iters=2)
         _row(f"t4_strong_basic_{nd}dev", dt * 1e6,
              f"flips_per_ns={n*cols*sweeps/dt/1e9:.4f}")
 
@@ -155,8 +190,10 @@ def table5_packed_scaling(per_dev_rows=256, cols=1024, sweeps=5):
         mesh = _mesh(nd)
         step, sh = dist.make_packed_ising_step(mesh, n=n, m=cols, seed=3,
                                                n_sweeps=sweeps)
-        bs, ws = jax.device_put(bw, sh), jax.device_put(ww, sh)
-        dt, _ = _timeit(lambda: step(bs, ws, beta, jnp.uint32(0)), iters=2)
+        tick = _rebind_stepper(
+            lambda s: step(*s, beta, jnp.uint32(0)),
+            (jax.device_put(bw, sh), jax.device_put(ww, sh)))
+        dt, _ = _timeit(tick, iters=2)
         _row(f"t5_weak_multispin_{nd}dev", dt * 1e6,
              f"flips_per_ns={n*cols*sweeps/dt/1e9:.4f}")
 
@@ -199,6 +236,50 @@ def table1_measure_fusion(n=64, n_measure=64, sweeps_between=1):
          f"dispatches={dispatches:.0f};"
          f"us_per_sample={dt*1e6/n_measure:.1f};"
          f"flips_per_ns={spins/dt/1e9:.4f}")
+
+
+# ---------------------------------------------------------------------------
+# Table 1 addendum: bitplane vs nibble multispin -- per-replica flips/ns
+# and the shared-draw randomness budget (DESIGN.md S8)
+# ---------------------------------------------------------------------------
+
+def table1_bitplane(n=256, sweeps=10, pallas_n=64, pallas_sweeps=2):
+    """Bitplane (32 replicas/word, ONE shared Philox uint32 per site)
+    against the nibble multispin engine on the same lattice.  The
+    ``philox_draws_per_spin`` column is the randomness budget per
+    *replica-spin*: 8 draws per 8-spin word for nibble multispin (1.0)
+    vs 1 draw per 32-replica word for bitplane (1/32) -- the ~32x draw
+    reduction of the shared-randoms scheme.  Acceptance criterion: the
+    bitplane ``replica_flips_per_ns`` must beat the multispin row."""
+    from repro.core.engine import ENGINES, make_engine
+    from repro.core.sim import SimConfig
+
+    for name in ("multispin", "bitplane"):
+        if not _engine_selected(name):
+            continue
+        cfg = SimConfig(n=n, m=n, temperature=2.27, seed=1, engine=name)
+        eng = make_engine(cfg)
+        state = eng.init_state(jax.random.PRNGKey(0))
+        dt, _ = _timeit(_sweep_stepper(eng, state, sweeps))
+        reps = ENGINES[name].replicas
+        flips = reps * n * n * sweeps
+        _row(f"t1_bitplane_{name}_{n}", dt * 1e6,
+             f"replica_flips_per_ns={flips/dt/1e9:.4f};"
+             f"philox_draws_per_spin={1.0/reps:.5f}")
+
+    # interpret-mode Pallas smoke (CI artifact row): small lattice, the
+    # interpreter is orders of magnitude off real-kernel throughput
+    if _engine_selected("bitplane_pallas"):
+        cfg = SimConfig(n=pallas_n, m=pallas_n, temperature=2.27, seed=1,
+                        engine="bitplane_pallas")
+        eng = make_engine(cfg)
+        state = eng.init_state(jax.random.PRNGKey(0))
+        dt, _ = _timeit(_sweep_stepper(eng, state, pallas_sweeps),
+                        iters=1, warmup=1)
+        flips = eng.replicas * pallas_n * pallas_n * pallas_sweeps
+        _row(f"t1_bitplane_pallas_interp_{pallas_n}", dt * 1e6,
+             f"replica_flips_per_ns={flips/dt/1e9:.4f};"
+             f"philox_draws_per_spin={1.0/eng.replicas:.5f}")
 
 
 # ---------------------------------------------------------------------------
@@ -256,37 +337,55 @@ def kernel_block_sweep(n=128, sweeps=3):
     width_words = n // 2 // 8
     for block_rows in (8, 16, 32, 64, 128):
         vmem_kb = 4 * block_rows * width_words * 4 / 1024
+        # copies: the wrapper donates and bw/ww are reused per block size
         dt, _ = _timeit(lambda: run_sweeps_multispin(
-            bw, ww, beta, sweeps, seed=1, block_rows=block_rows,
-            interpret=True), iters=1, warmup=1)
+            bw.copy(), ww.copy(), beta, sweeps, seed=1,
+            block_rows=block_rows, interpret=True), iters=1, warmup=1)
         _row(f"kblocks_multispin_rows{block_rows}", dt * 1e6,
              f"vmem_working_set_kb={vmem_kb:.0f}")
 
 
 def main() -> None:
-    global _RECORDER
+    global _RECORDER, _ENGINE_FILTER
     ap = argparse.ArgumentParser()
-    ap.add_argument("--only", default="")
+    ap.add_argument("--only", default="",
+                    help="comma-separated substrings: run benches whose "
+                         "name contains any of them")
+    ap.add_argument("--engines", default="",
+                    help="comma-separated engine names: restrict the "
+                         "registry-driven engine benches (table1) to this "
+                         "subset, e.g. --engines multispin,bitplane")
     ap.add_argument("--json", nargs="?", const=".", default=None,
                     metavar="DIR_OR_PATH",
                     help="also write a BENCH_<stamp>.json perf record "
                          "(diff two with benchmarks/report.py diff A B)")
     args, _ = ap.parse_known_args()
+    _ENGINE_FILTER = tuple(e for e in args.engines.split(",") if e)
+    from repro.core.engine import ENGINES
+    unknown = sorted(set(_ENGINE_FILTER) - set(ENGINES))
+    if unknown:
+        ap.error(f"--engines: unknown engine(s) {unknown}; "
+                 f"registered: {sorted(ENGINES)}")
 
     from repro.analysis.recorder import RunRecorder
     stamp = time.strftime("%Y%m%d_%H%M%S")
     _RECORDER = RunRecorder(echo=True, meta={
         "stamp": stamp, "backend": jax.default_backend(),
-        "device_count": jax.device_count(), "only": args.only})
+        "device_count": jax.device_count(), "only": args.only,
+        "engines": args.engines})
 
     benches = [table1_single_device, table1_measure_fusion,
-               table2_multispin_sizes, table2_ensemble_batch,
-               table3_weak_scaling, table4_strong_scaling,
-               table5_packed_scaling, fig5_validation, kernel_block_sweep,
-               roofline_summary]
-    for b in benches:
-        if args.only and args.only not in b.__name__:
-            continue
+               table1_bitplane, table2_multispin_sizes,
+               table2_ensemble_batch, table3_weak_scaling,
+               table4_strong_scaling, table5_packed_scaling,
+               fig5_validation, kernel_block_sweep, roofline_summary]
+    only = [tok for tok in args.only.split(",") if tok]
+    selected = [b for b in benches
+                if not only or any(tok in b.__name__ for tok in only)]
+    if not selected:
+        ap.error(f"--only {args.only!r} matches no bench; benches: "
+                 f"{[b.__name__ for b in benches]}")
+    for b in selected:
         b()
 
     if args.json is not None:

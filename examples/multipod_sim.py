@@ -25,8 +25,10 @@ b, w = lat.split_checkerboard(full)
 beta = jnp.float32(1 / 2.0)
 
 step, sh = dist.make_ising_step(mesh, n=N, m=N, seed=5, n_sweeps=50)
-b1, w1 = step(jax.device_put(b, sh), jax.device_put(w, sh), beta,
-              jnp.uint32(0))
+# the step donates its plane buffers (EXPERIMENTS.md H1.8); hand it
+# copies -- device_put alone may alias b/w on a single-device mesh
+b1, w1 = step(jax.device_put(b.copy(), sh), jax.device_put(w.copy(), sh),
+              beta, jnp.uint32(0))
 mag = dist.magnetization_dist(mesh)
 print(f"distributed m after 50 sweeps: {float(mag(b1, w1)):+.4f}")
 

@@ -124,9 +124,10 @@ def measure_scan(engine, state, plan: MeasurementPlan, step_count: int = 0):
     """Run ``plan`` on a single simulation state in one compiled dispatch.
 
     Returns ``(final_state, {field: (n_measure,) float32 ndarray},
-    new_step_count)``.  Samples are bit-identical to the legacy python
-    loop ``run(sweeps_between); measure()`` repeated ``n_measure`` times
-    (tested in tests/test_analysis.py).
+    new_step_count)``.  Replicated engines (bitplane) append their
+    per-replica axis: ``(n_measure, replicas)``.  Samples are
+    bit-identical to the legacy python loop ``run(sweeps_between);
+    measure()`` repeated ``n_measure`` times (tests/test_analysis.py).
     """
     fn = _compiled(engine, plan, batched=False)
     state, traj = fn(state, jnp.float32(engine.cfg.inv_temp),
@@ -151,5 +152,7 @@ def measure_scan_batched(engine, states, inv_temps, seeds,
     fn = _compiled(engine, plan, batched=True)
     states, traj = fn(states, inv_temps, seeds, jnp.int32(step_count))
     _bump()
-    traj = {k: np.asarray(v).T for k, v in traj.items()}  # (B, n) -> (n, B)
+    # (B, n, ...) -> (n, B, ...): moveaxis, not .T, so replicated engines'
+    # per-replica observable vectors keep their trailing axis intact
+    traj = {k: np.moveaxis(np.asarray(v), 0, 1) for k, v in traj.items()}
     return states, traj, step_count + plan.total_sweeps

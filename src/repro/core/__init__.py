@@ -1,5 +1,5 @@
 """Ising engines: the paper's contribution as composable JAX modules."""
-from . import distributed, lattice, metropolis, multispin, observables, rng, tensorcore  # noqa: F401
+from . import bitplane, distributed, lattice, metropolis, multispin, observables, rng, tensorcore  # noqa: F401
 from .engine import ENGINES, Engine, make_engine  # noqa: F401
 from .ensemble import Ensemble  # noqa: F401
 from .sim import Simulation, SimConfig  # noqa: F401

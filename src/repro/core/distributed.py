@@ -77,6 +77,38 @@ def _exchange_halos(op, row_axes, col_axes):
     return top, bottom, left, right
 
 
+def _haloed_taps(op, halos):
+    """(up, down, nxt, prv) neighbor taps of the local shard with the
+    exchanged halo rows/columns spliced in.
+
+    H1.4 (EXPERIMENTS.md S Perf): every shifted read is pad+slice (a
+    fusible producer) and the halo row/column enters through an
+    iota-mask select over a virtual broadcast -- no extended buffer, no
+    concatenates -- so each color update stays one fusion whose HBM
+    traffic is read(op) + read(target) + write(target).  Shared by the
+    basic, packed, and bitplane distributed updates.
+    """
+    top, bottom, left, right = halos
+    nl, wl = op.shape
+    zero = jnp.zeros((), op.dtype)
+    row_i = jax.lax.broadcasted_iota(jnp.int32, op.shape, 0)
+    col_i = jax.lax.broadcasted_iota(jnp.int32, op.shape, 1)
+
+    def shift(x, dr, dc):
+        """out[i,j] = x[i+dr, j+dc], zero-filled out of range."""
+        pad_cfg = [(max(-dr, 0), max(dr, 0), 0),
+                   (max(-dc, 0), max(dc, 0), 0)]
+        padded = jax.lax.pad(x, zero, pad_cfg)
+        return jax.lax.slice(padded, (max(dr, 0), max(dc, 0)),
+                             (max(dr, 0) + nl, max(dc, 0) + wl))
+
+    up = jnp.where(row_i == 0, top, shift(op, -1, 0))
+    down = jnp.where(row_i == nl - 1, bottom, shift(op, 1, 0))
+    nxt = jnp.where(col_i == wl - 1, right, shift(op, 0, 1))   # (i, k+1)
+    prv = jnp.where(col_i == 0, left, shift(op, 0, -1))        # (i, k-1)
+    return up, down, nxt, prv
+
+
 # ---------------------------------------------------------------------------
 # halo-aware neighbor sums (basic int8 engine)
 # ---------------------------------------------------------------------------
@@ -86,27 +118,10 @@ def _nn_with_halos(op, halos, is_black, row0_parity):
 
     ``row0_parity`` is the global parity of the shard's first row (0 if the
     per-shard row count is even, which mesh construction guarantees).
+    int8 arithmetic throughout: 4-neighbor sums fit, avoiding 4x-wide
+    intermediates if XLA materializes anything (H1.5, EXPERIMENTS.md).
     """
-    top, bottom, left, right = halos
-    nl, wl = op.shape
-    row_i = jax.lax.broadcasted_iota(jnp.int32, op.shape, 0)
-    col_i = jax.lax.broadcasted_iota(jnp.int32, op.shape, 1)
-    dt = op.dtype  # int8: 4-neighbor sums fit; avoids 4x-wide
-    # intermediates if XLA materializes anything (H1.5, EXPERIMENTS.md)
-
-    def shift(x, dr, dc):
-        """out[i,j] = x[i+dr, j+dc] (pad+slice: fuses, unlike concat --
-        see EXPERIMENTS.md S Perf H1.4)."""
-        pad_cfg = [(max(-dr, 0), max(dr, 0), 0),
-                   (max(-dc, 0), max(dc, 0), 0)]
-        padded = jax.lax.pad(x, jnp.zeros((), dt), pad_cfg)
-        return jax.lax.slice(padded, (max(dr, 0), max(dc, 0)),
-                             (max(dr, 0) + nl, max(dc, 0) + wl))
-
-    up = jnp.where(row_i == 0, top, shift(op, -1, 0))
-    down = jnp.where(row_i == nl - 1, bottom, shift(op, 1, 0))
-    plus = jnp.where(col_i == wl - 1, right, shift(op, 0, 1))   # (i, k+1)
-    minus = jnp.where(col_i == 0, left, shift(op, 0, -1))       # (i, k-1)
+    up, down, plus, minus = _haloed_taps(op, halos)
     rows = (jnp.arange(op.shape[0]) + row0_parity) % 2
     rows = rows[:, None]
     if is_black:
@@ -198,7 +213,9 @@ def make_ising_step(mesh, *, n: int, m: int, seed: int = 0,
                               row_axes, col_axes)
         return jax.lax.fori_loop(0, n_sweeps, body, (black, white))
 
-    return jax.jit(_sweeps), sharding
+    # plane buffers are donated: callers rebind (b, w = step(b, w, ...)),
+    # so a sharded lattice never holds two copies per device in HBM
+    return jax.jit(_sweeps, donate_argnums=(0, 1)), sharding
 
 
 def make_packed_ising_step(mesh, *, n: int, m: int, seed: int = 0,
@@ -218,31 +235,9 @@ def make_packed_ising_step(mesh, *, n: int, m: int, seed: int = 0,
     spec = P(row_axes, col_axes)
     nib = lat.NIBBLE_BITS
 
-    def update_packed(target, op, inv_temp, is_black, offset):
-        # H1.4 (EXPERIMENTS.md S Perf): express every shifted read as
-        # pad+slice (a fusible producer) and splice the halo row/column in
-        # with an iota-mask select over a virtual broadcast.  No extended
-        # buffer, no concatenates: the whole color update is one fusion
-        # whose HBM traffic is read(op) + read(target) + write(target).
-        top, bottom, left, right = _exchange_halos(op, row_axes, col_axes)
-        nl, wl = op.shape
-        zero = jnp.uint32(0)
-        row_i = jax.lax.broadcasted_iota(jnp.int32, op.shape, 0)
-        col_i = jax.lax.broadcasted_iota(jnp.int32, op.shape, 1)
-
-        def shift(x, dr, dc):
-            """out[i,j] = x[i+dr, j+dc], zero-filled out of range."""
-            pad_cfg = [(max(-dr, 0), max(dr, 0), 0),
-                       (max(-dc, 0), max(dc, 0), 0)]
-            padded = jax.lax.pad(x, zero, pad_cfg)
-            return jax.lax.slice(
-                padded, (max(dr, 0), max(dc, 0)),
-                (max(dr, 0) + nl, max(dc, 0) + wl))
-
-        up = jnp.where(row_i == 0, top, shift(op, -1, 0))
-        down = jnp.where(row_i == nl - 1, bottom, shift(op, 1, 0))
-        nxt = jnp.where(col_i == wl - 1, right, shift(op, 0, 1))
-        prv = jnp.where(col_i == 0, left, shift(op, 0, -1))
+    def update_packed(target, op, is_black, offset, thresholds):
+        halos = _exchange_halos(op, row_axes, col_axes)
+        up, down, nxt, prv = _haloed_taps(op, halos)
         plus = (op >> jnp.uint32(nib)) | (nxt << jnp.uint32(32 - nib))
         minus = (op << jnp.uint32(nib)) | (prv >> jnp.uint32(32 - nib))
         rows = (jax.lax.broadcasted_iota(jnp.uint32, op.shape, 0)
@@ -258,24 +253,118 @@ def make_packed_ising_step(mesh, *, n: int, m: int, seed: int = 0,
             sh = jnp.uint32(k * nib)
             s = (target >> sh) & jnp.uint32(1)
             nnk = (nn_words >> sh) & jnp.uint32(0xF)
-            pacc = ms.acceptance_prob(inv_temp, s, nnk)
-            u = crng.u32_to_uniform(draws[k])
-            flip = flip | ((u < pacc).astype(jnp.uint32) << sh)
+            idx = (s * jnp.uint32(5) + nnk).astype(jnp.int32)
+            t = jnp.take(thresholds, idx)   # integer-domain accept (H1.6)
+            flip = flip | ((draws[k] < t).astype(jnp.uint32) << sh)
         return target ^ flip
 
     @functools.partial(compat.shard_map, mesh=mesh,
                        in_specs=(spec, spec, P(), P()),
                        out_specs=(spec, spec), check_vma=False)
     def sweeps(black, white, inv_temp, sweep0):
+        thresholds = ms.acceptance_thresholds(inv_temp)  # hoisted (H1.6)
+
         def body(i, carry):
             b, w = carry
             off = sweep0 + 2 * jnp.uint32(i)
-            b = update_packed(b, w, inv_temp, True, off)
-            w = update_packed(w, b, inv_temp, False, off + 1)
+            b = update_packed(b, w, True, off, thresholds)
+            w = update_packed(w, b, False, off + 1, thresholds)
             return b, w
         return jax.lax.fori_loop(0, n_sweeps, body, (black, white))
 
-    return jax.jit(sweeps), jax.sharding.NamedSharding(mesh, spec)
+    return (jax.jit(sweeps, donate_argnums=(0, 1)),
+            jax.sharding.NamedSharding(mesh, spec))
+
+
+def make_bitplane_ising_step(mesh, *, n: int, m: int, seed: int = 0,
+                             n_sweeps: int = 1, row_axes=None,
+                             col_axes=None):
+    """Bitplane (32 replicas/word, DESIGN.md S8) distributed sweep.
+
+    Same ring-shift halo machinery as the other engines: one word-row
+    per vertical direction, one word-column per horizontal direction
+    (the side tap reads a whole neighbor word -- the bitplane layout
+    keeps one word per site, so no sub-word splice is needed).  The
+    shared per-site Philox draw is keyed on the *global* (site // 4,
+    site % 4) pair, recomputed per local site with a lane select, so the
+    step reproduces the single-device ``run_sweeps_bitplane`` trajectory
+    bit-for-bit on any mesh (tests/test_bitplane.py).  Returns
+    (jitted step(black, white, inv_temp, sweep0), word-plane sharding);
+    the plane buffers are donated.
+    """
+    from . import bitplane as bp
+    from . import multispin as ms
+
+    names = list(mesh.axis_names)
+    row_axes = tuple(row_axes if row_axes is not None else names[:-1])
+    col_axes = tuple(col_axes if col_axes is not None else names[-1:])
+    half = m // 2
+    assert half % 4 == 0, "bitplane planes need a multiple-of-4 width"
+    rows_devs = 1
+    for a in row_axes:
+        rows_devs *= mesh.shape[a]
+    cols_devs = 1
+    for a in col_axes:
+        cols_devs *= mesh.shape[a]
+    assert n % rows_devs == 0 and (n // rows_devs) % 2 == 0, (
+        "per-shard row count must be even so checkerboard parity is uniform")
+    assert half % cols_devs == 0
+    spec = P(row_axes, col_axes)
+
+    # static: when every shard's column range is 4-aligned (the common
+    # case), whole draw groups are shard-local and one Philox call serves
+    # 4 sites, exactly as core.bitplane.site_randoms; otherwise fall back
+    # to a per-site call + lane select (4x the Philox work, same bits)
+    aligned_cols = (half // cols_devs) % 4 == 0
+
+    def site_draws(shape, offset):
+        nl, wl = shape
+        k0, k1 = crng.seed_keys(seed)
+        off = jnp.asarray(offset, jnp.uint32)
+        if aligned_cols:
+            rpos, gcol = _global_positions((nl, wl // 4), row_axes,
+                                           col_axes)
+            g = (rpos * (half // 4) + gcol).astype(jnp.uint32)
+            zg = jnp.zeros_like(g)
+            lanes = crng.philox4x32(off, zg, g, zg, k0, k1)
+            return jnp.stack(lanes, axis=-1).reshape(nl, wl)
+        rpos, cpos = _global_positions(shape, row_axes, col_axes)
+        g = (rpos * (half // 4) + cpos // 4).astype(jnp.uint32)
+        lane = (cpos % 4).astype(jnp.uint32)
+        zg = jnp.zeros_like(g)
+        l0, l1, l2, l3 = crng.philox4x32(off, zg, g, zg, k0, k1)
+        return jnp.where(lane == 0, l0,
+                         jnp.where(lane == 1, l1,
+                                   jnp.where(lane == 2, l2, l3)))
+
+    def update_bitplane(target, op, is_black, offset, thresholds):
+        halos = _exchange_halos(op, row_axes, col_axes)
+        up, down, nxt, prv = _haloed_taps(op, halos)
+        rpos, _ = _global_positions(target.shape, row_axes, col_axes)
+        parity = (rpos % 2).astype(jnp.uint32)
+        side = jnp.where(parity == 1, nxt, prv) if is_black \
+            else jnp.where(parity == 1, prv, nxt)
+        counts = bp.bit_count_neighbors(up, down, op, side)
+        draws = site_draws(target.shape, offset)
+        return target ^ bp.flip_word_from_classes(target, counts, draws,
+                                                  thresholds)
+
+    @functools.partial(compat.shard_map, mesh=mesh,
+                       in_specs=(spec, spec, P(), P()),
+                       out_specs=(spec, spec), check_vma=False)
+    def sweeps(black, white, inv_temp, sweep0):
+        thresholds = ms.acceptance_thresholds(inv_temp)  # hoisted (H1.6)
+
+        def body(i, carry):
+            b, w = carry
+            off = sweep0 + 2 * jnp.uint32(i)
+            b = update_bitplane(b, w, True, off, thresholds)
+            w = update_bitplane(w, b, False, off + 1, thresholds)
+            return b, w
+        return jax.lax.fori_loop(0, n_sweeps, body, (black, white))
+
+    return (jax.jit(sweeps, donate_argnums=(0, 1)),
+            jax.sharding.NamedSharding(mesh, spec))
 
 
 def magnetization_dist(mesh, row_axes=None, col_axes=None):

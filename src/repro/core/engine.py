@@ -1,4 +1,4 @@
-"""Pluggable engine registry: one protocol, seven update algorithms.
+"""Pluggable engine registry: one protocol, nine update algorithms.
 
 The paper's contribution is *comparing implementations* of the same 2D
 Ising Metropolis update; this module is the seam that makes the
@@ -46,6 +46,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from . import bitplane as bp
 from . import lattice as lat
 from . import metropolis as metro
 from . import multispin as ms
@@ -80,6 +81,9 @@ class Engine:
 
     name: ClassVar[str]
     counter_based: ClassVar[bool] = False  # True: vmap-safe Philox sweeps
+    #: independent replica chains carried per state (1 for every engine
+    #: except bitplane, whose observables are per-replica vectors)
+    replicas: ClassVar[int] = 1
 
     def __init__(self, config):
         self.cfg = config
@@ -152,20 +156,32 @@ class CounterEngine(Engine):
         super().__init__(config)
         self._jit_cache: Dict[int, Callable] = {}
 
-    def color_update(self, target, op, inv_temp, is_black, seed, offset):
-        """One half-sweep; ``seed`` may be a python int or uint32 trace."""
+    def color_update(self, target, op, inv_temp, is_black, seed, offset,
+                     ctx=None):
+        """One half-sweep; ``seed`` may be a python int or uint32 trace.
+
+        ``ctx`` receives :meth:`sweep_context`'s per-call precomputation.
+        """
         raise NotImplementedError
+
+    def sweep_context(self, inv_temp):
+        """Loop-invariant precomputation (e.g. the integer acceptance
+        thresholds, H1.6) evaluated ONCE per sweep call and passed to
+        every ``color_update`` -- structurally hoisted out of the
+        fori_loop rather than left to XLA's LICM."""
+        return None
 
     def sweep_fn(self, state, inv_temp, seed, start_offset, n_sweeps: int):
         """Pure sweep kernel: n_sweeps x (black, white) half-sweeps with
         cuRAND-style offsets 2i / 2i+1 past ``start_offset``."""
         start = jnp.uint32(start_offset)
+        ctx = self.sweep_context(inv_temp)
 
         def body(i, carry):
             b, w = carry
             off = start + 2 * jnp.uint32(i)
-            b = self.color_update(b, w, inv_temp, True, seed, off)
-            w = self.color_update(w, b, inv_temp, False, seed, off + 1)
+            b = self.color_update(b, w, inv_temp, True, seed, off, ctx)
+            w = self.color_update(w, b, inv_temp, False, seed, off + 1, ctx)
             return (b, w)
 
         return jax.lax.fori_loop(0, n_sweeps, body, tuple(state))
@@ -178,11 +194,27 @@ class CounterEngine(Engine):
         fn = self._jit_cache.get(n_sweeps)
         if fn is None:
             seed = self.cfg.seed  # closed over: python int, full 64-bit keys
+            # the incoming state buffers are donated: callers rebind
+            # (state = engine.sweeps(state, ...)), so large lattices never
+            # hold two copies of a plane in HBM
             fn = jax.jit(lambda s, beta, off: self.sweep_fn(
-                s, beta, seed, off, n_sweeps))
+                s, beta, seed, off, n_sweeps), donate_argnums=(0,))
             self._jit_cache[n_sweeps] = fn
         return fn(state, jnp.float32(self.cfg.inv_temp),
                   jnp.uint32(2 * step_count))
+
+
+def _even_block_rows(n: int, cap: int = 256) -> int:
+    """Largest even row-block count <= ``cap`` dividing the plane height
+    ``n`` -- the Pallas row-block engines need even blocks so checkerboard
+    parity is uniform within a block."""
+    best = 0
+    for d in range(2, min(n, cap) + 1, 2):
+        if n % d == 0:
+            best = d
+    assert best, f"Pallas row-block engines need an even lattice height," \
+        f" got {n}"
+    return best
 
 
 # ---------------------------------------------------------------------------
@@ -230,7 +262,8 @@ class BasicPhiloxEngine(_PlanesEngine, CounterEngine):
 
     name = "basic_philox"
 
-    def color_update(self, target, op, inv_temp, is_black, seed, offset):
+    def color_update(self, target, op, inv_temp, is_black, seed, offset,
+                     ctx=None):
         return metro.update_color_philox(target, op, inv_temp, is_black,
                                          seed, offset)
 
@@ -248,18 +281,11 @@ class StencilPallasEngine(_PlanesEngine, CounterEngine):
 
     def __init__(self, config):
         super().__init__(config)
-        # largest even row-block count that divides the plane height; the
-        # kernel requires even blocks so checkerboard parity is uniform
-        n = config.n
-        best = 0
-        for d in range(2, min(n, 256) + 1, 2):
-            if n % d == 0:
-                best = d
-        assert best, f"stencil_pallas needs an even lattice height, got {n}"
-        self.block_rows = best
+        self.block_rows = _even_block_rows(config.n)
         self.interpret = jax.default_backend() != "tpu"
 
-    def color_update(self, target, op, inv_temp, is_black, seed, offset):
+    def color_update(self, target, op, inv_temp, is_black, seed, offset,
+                     ctx=None):
         from repro.kernels.stencil.stencil import stencil_update
         return stencil_update(target, op, inv_temp, is_black=is_black,
                               seed=seed, offset=offset,
@@ -286,9 +312,13 @@ class MultispinEngine(CounterEngine):
     def magnetization(self, state):
         return obs.magnetization(*ms.unpack_lattice(*state))
 
-    def color_update(self, target, op, inv_temp, is_black, seed, offset):
+    def sweep_context(self, inv_temp):
+        return ms.acceptance_thresholds(inv_temp)
+
+    def color_update(self, target, op, inv_temp, is_black, seed, offset,
+                     ctx=None):
         return ms.update_color_packed(target, op, inv_temp, is_black,
-                                      seed, offset)
+                                      seed, offset, thresholds=ctx)
 
     def state_arrays(self, state):
         return {"black_words": np.asarray(state[0]),
@@ -297,6 +327,103 @@ class MultispinEngine(CounterEngine):
     def from_arrays(self, arrays):
         return (jnp.asarray(arrays["black_words"]),
                 jnp.asarray(arrays["white_words"]))
+
+
+# ---------------------------------------------------------------------------
+# bitplane engines: 32 replicas/word (DESIGN.md S8)
+# ---------------------------------------------------------------------------
+
+@register
+class BitplaneEngine(CounterEngine):
+    """Bitplane multi-spin coding: 32 independent replica lattices packed
+    1 bit/spin into each uint32 word (DESIGN.md S8, Block et al.).
+
+    One simulation advances 32 replicas; ``observables`` returns
+    *per-replica* (32,) vectors, which flow through ``measure_scan`` and
+    the estimators unchanged (the trajectory gains a trailing replica
+    axis).  ``full_lattice`` is the replica-0 view, and ``init_state``
+    seeds replica 0 exactly like the single-lattice engines (replica r
+    folds r into the key), so the cross-engine init contract holds.
+    """
+
+    name = "bitplane"
+    replicas = bp.N_REPLICAS
+
+    def init_state(self, key):
+        cfg = self.cfg
+
+        def init_one(k):
+            return lat.init_lattice(k, cfg.n, cfg.m, p_up=cfg.init_p_up)
+
+        r0 = init_one(key)
+        keys = jax.vmap(lambda r: jax.random.fold_in(key, r))(
+            jnp.arange(1, bp.N_REPLICAS))
+        rest = jax.vmap(init_one)(keys)
+        return bp.pack_lattices(jnp.concatenate([r0[None], rest], axis=0))
+
+    def from_full(self, full):
+        black, white = lat.split_checkerboard(full)
+        return (bp.broadcast_plane(lat.to_binary(black)),
+                bp.broadcast_plane(lat.to_binary(white)))
+
+    def full_lattice(self, state):
+        return bp.replica_lattice(*state, r=0)
+
+    def magnetization(self, state):
+        # only the magnetizations: skip replica_observables' per-replica
+        # energies, which an eager caller would pay for and discard
+        fulls = bp.unpack_lattices(*state)
+        return jnp.mean(jax.vmap(obs.magnetization_full)(fulls))
+
+    def energy(self, state):
+        # only the energies (see magnetization)
+        fulls = bp.unpack_lattices(*state)
+        return jnp.mean(jax.vmap(obs.energy_per_spin_full)(fulls))
+
+    def observables(self, state, inv_temp):
+        """Per-replica vectors: {"m": (32,), "e": (32,)}."""
+        return bp.replica_observables(*state)
+
+    def sweep_context(self, inv_temp):
+        return ms.acceptance_thresholds(inv_temp)
+
+    def color_update(self, target, op, inv_temp, is_black, seed, offset,
+                     ctx=None):
+        return bp.update_color_bitplane(target, op, inv_temp, is_black,
+                                        seed, offset, thresholds=ctx)
+
+    def state_arrays(self, state):
+        return {"black_bits": np.asarray(state[0]),
+                "white_bits": np.asarray(state[1])}
+
+    def from_arrays(self, arrays):
+        return (jnp.asarray(arrays["black_bits"]),
+                jnp.asarray(arrays["white_bits"]))
+
+
+@register
+class BitplanePallasEngine(BitplaneEngine):
+    """Fused Pallas bitplane kernel; interpret-mode on CPU.
+
+    Philox is keyed on the global (site // 4, site % 4) pair, so this
+    engine is bit-for-bit identical to ``bitplane`` -- the kernel's
+    pure-jnp oracle -- at any block size (tests/test_bitplane.py).
+    """
+
+    name = "bitplane_pallas"
+
+    def __init__(self, config):
+        super().__init__(config)
+        self.block_rows = _even_block_rows(config.n)
+        self.interpret = jax.default_backend() != "tpu"
+
+    def color_update(self, target, op, inv_temp, is_black, seed, offset,
+                     ctx=None):
+        from repro.kernels.bitplane.bitplane import bitplane_update
+        return bitplane_update(target, op, inv_temp, is_black=is_black,
+                               seed=seed, offset=offset,
+                               block_rows=self.block_rows,
+                               interpret=self.interpret, thresholds=ctx)
 
 
 # ---------------------------------------------------------------------------

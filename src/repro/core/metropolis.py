@@ -74,7 +74,8 @@ def run_sweeps(black, white, inv_temp, key, n_sweeps: int, seed: int = 0):
     return jax.lax.fori_loop(0, n_sweeps, body, (black, white, key))
 
 
-@functools.partial(jax.jit, static_argnames=("n_sweeps", "seed"))
+@functools.partial(jax.jit, static_argnames=("n_sweeps", "seed"),
+                   donate_argnums=(0, 1))
 def run_sweeps_philox(black, white, inv_temp, n_sweeps: int, seed: int = 0,
                       start_offset=0):
     """n_sweeps full sweeps with deterministic skip-ahead Philox.
@@ -82,6 +83,9 @@ def run_sweeps_philox(black, white, inv_temp, n_sweeps: int, seed: int = 0,
     ``start_offset`` is the cumulative half-sweep count already consumed --
     exactly cuRAND's offset mechanism -- so a checkpoint/restart continues
     the *same* random sequence (tested bit-exact in tests/).
+
+    The plane buffers are donated (callers rebind ``b, w = ...``): large
+    lattices never hold two copies of a plane in HBM.
     """
     start_offset = jnp.uint32(start_offset)
 

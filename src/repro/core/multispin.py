@@ -3,9 +3,11 @@
 Spins are 0/1 nibbles packed 8-per-uint32 (the TPU VPU analogue of the
 paper's 16-per-uint64 -- see DESIGN.md S2).  Per target word the neighbor
 sums cost THREE packed adds (vs 24 unpacked for 8 spins).  The Metropolis
-accept uses a 10-entry threshold LUT instead of a per-spin ``exp`` --
-acceptance probabilities only take values ``exp(-2 beta (2s-1)(2 nn - 4))``
-for ``s in {0,1}, nn in {0..4}`` (beyond-paper: the paper evaluates exp on
+accept compares the raw uint32 draw against a 10-entry *integer* threshold
+LUT (H1.6) -- acceptance probabilities only take values
+``exp(-2 beta (2s-1)(2 nn - 4))`` for ``s in {0,1}, nn in {0..4}``, so the
+table is computed once per sweep call and the hot path does zero ``exp``
+and zero draw->float conversion (beyond-paper: the paper evaluates exp on
 the hot path).
 
 Randomness is in-place counter-based Philox (cuRAND semantics): two
@@ -47,6 +49,25 @@ def acceptance_prob(inv_temp, s_u32, nn_u32):
     return jnp.exp(-2.0 * inv_temp * (2.0 * s - 1.0) * (2.0 * nn - 4.0))
 
 
+def acceptance_thresholds(inv_temp) -> jax.Array:
+    """The 10-entry acceptance table in the *integer* domain (H1.6).
+
+    ``t[s * 5 + nn]`` is a uint32 threshold such that ``raw_u32_draw < t``
+    accepts with probability ``min(1, p(s, nn))`` up to 2^-32 quantization:
+    classes with p >= 1 (energy-lowering or neutral flips) map to
+    0xFFFFFFFF, so they accept with probability 1 - 2^-32 -- statistically
+    invisible, and what buys the hot path freedom from per-spin ``exp``
+    *and* the uint32->float32 draw conversion.  Computed once per sweep
+    call (10 exps), hoisted out of the fori_loop by the sweep wrappers.
+    """
+    p = acceptance_table(inv_temp)
+    # p < 1 in float32 means p <= 1 - 2^-24, so p * 2^32 <= 2^32 - 256
+    # fits uint32 exactly; astype truncates toward zero.
+    scaled = p * jnp.float32(4294967296.0)
+    return jnp.where(p < 1.0, scaled.astype(jnp.uint32),
+                     jnp.uint32(0xFFFFFFFF))
+
+
 def word_randoms(seed, word_index, offset):
     """8 uint32 draws per word: two Philox4x32 calls (cuRAND-style).
 
@@ -60,34 +81,45 @@ def word_randoms(seed, word_index, offset):
 
 
 def update_color_packed(target_words, op_words, inv_temp, is_black: bool,
-                        seed: int, offset):
-    """One packed half-sweep. target/op are (N, W) uint32 nibble words."""
+                        seed: int, offset, thresholds=None):
+    """One packed half-sweep. target/op are (N, W) uint32 nibble words.
+
+    The accept is a raw-uint32 compare against the precomputed
+    :func:`acceptance_thresholds` table (H1.6): no per-spin ``exp``, no
+    draw->float conversion.  ``thresholds`` lets sweep loops hoist the
+    table out of their ``fori_loop``; ``None`` computes it here.
+    """
     nn_words = lat.packed_neighbor_sums(op_words, is_black)
     n, w = target_words.shape
     widx = jnp.arange(n * w, dtype=jnp.uint32).reshape(n, w)
     draws = word_randoms(seed, widx, offset)
+    if thresholds is None:
+        thresholds = acceptance_thresholds(inv_temp)
 
     flip_word = jnp.zeros_like(target_words)
     for nib in range(lat.SPINS_PER_WORD):
         s = (target_words >> jnp.uint32(nib * _NIB)) & jnp.uint32(1)
         nn = (nn_words >> jnp.uint32(nib * _NIB)) & jnp.uint32(0xF)
-        p = acceptance_prob(inv_temp, s, nn)
-        u = crng.u32_to_uniform(draws[nib])
-        flip = (u < p).astype(jnp.uint32)
+        idx = (s * jnp.uint32(5) + nn).astype(jnp.int32)
+        t = jnp.take(thresholds, idx)   # 10-entry table, integer domain
+        flip = (draws[nib] < t).astype(jnp.uint32)
         flip_word = flip_word | (flip << jnp.uint32(nib * _NIB))
     return target_words ^ flip_word
 
 
-@functools.partial(jax.jit, static_argnames=("n_sweeps", "seed"))
+@functools.partial(jax.jit, static_argnames=("n_sweeps", "seed"),
+                   donate_argnums=(0, 1))
 def run_sweeps_packed(black_words, white_words, inv_temp, n_sweeps: int,
                       seed: int = 0, start_offset=0):
     start_offset = jnp.uint32(start_offset)
+    thresholds = acceptance_thresholds(inv_temp)   # hoisted: once per call
 
     def body(i, carry):
         b, w = carry
         off = start_offset + 2 * jnp.uint32(i)
-        b = update_color_packed(b, w, inv_temp, True, seed, off)
-        w = update_color_packed(w, b, inv_temp, False, seed, off + 1)
+        b = update_color_packed(b, w, inv_temp, True, seed, off, thresholds)
+        w = update_color_packed(w, b, inv_temp, False, seed, off + 1,
+                                thresholds)
         return (b, w)
 
     return jax.lax.fori_loop(0, n_sweeps, body,

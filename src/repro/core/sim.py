@@ -83,7 +83,9 @@ class Simulation:
     def trajectory(self, n_measure: int, sweeps_between: int,
                    thermalize: int = 0) -> np.ndarray:
         """Magnetization samples via the fused scan: one device dispatch
-        per trajectory, bit-identical to the legacy per-sample loop."""
+        per trajectory, bit-identical to the legacy per-sample loop.
+        Shape ``(n_measure,)``; replicated engines (bitplane) return
+        ``(n_measure, replicas)`` -- one series per replica chain."""
         from repro.analysis.measure import MeasurementPlan
         plan = MeasurementPlan(n_measure, sweeps_between, thermalize,
                                fields=("m",))

@@ -1,0 +1,35 @@
+"""Jitted wrappers for the bitplane kernel: full sweeps on one device."""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from .bitplane import bitplane_update
+
+
+@functools.partial(jax.jit, static_argnames=("n_sweeps", "seed",
+                                             "block_rows", "interpret"),
+                   donate_argnums=(0, 1))
+def run_sweeps_bitplane_kernel(black_words, white_words, inv_temp,
+                               n_sweeps: int, seed: int = 0, start_offset=0,
+                               block_rows: int = 256,
+                               interpret: bool = False):
+    from repro.core import multispin as ms
+    start_offset = jnp.uint32(start_offset)
+    thresholds = ms.acceptance_thresholds(inv_temp)  # hoisted (H1.6)
+
+    def body(i, carry):
+        b, w = carry
+        off = start_offset + 2 * jnp.uint32(i)
+        b = bitplane_update(b, w, inv_temp, is_black=True, seed=seed,
+                            offset=off, block_rows=block_rows,
+                            interpret=interpret, thresholds=thresholds)
+        w = bitplane_update(w, b, inv_temp, is_black=False, seed=seed,
+                            offset=off + 1, block_rows=block_rows,
+                            interpret=interpret, thresholds=thresholds)
+        return (b, w)
+
+    return jax.lax.fori_loop(0, n_sweeps, body,
+                             (black_words, white_words))

@@ -1,0 +1,15 @@
+"""Pure-jnp oracle for the bitplane kernel (delegates to the core engine).
+
+The core engine (repro.core.bitplane) keys its shared-per-site Philox
+stream on (site // 4, site % 4) and the half-sweep offset exactly as the
+kernel does, so the match is bit-exact, not merely allclose.
+"""
+from __future__ import annotations
+
+from repro.core import bitplane as bp
+
+
+def bitplane_update_ref(target_words, op_words, inv_temp, *,
+                        is_black: bool, seed: int = 0, offset=0):
+    return bp.update_color_bitplane(target_words, op_words, inv_temp,
+                                    is_black, seed, offset)

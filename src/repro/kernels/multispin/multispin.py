@@ -29,7 +29,7 @@ DEFAULT_BLOCK_ROWS = 256
 _NIB = lat.NIBBLE_BITS
 
 
-def _kernel(seeds_ref, table_ref, target_ref, op_m1_ref, op_0_ref,
+def _kernel(seeds_ref, thr_ref, target_ref, op_m1_ref, op_0_ref,
             op_p1_ref, out_ref, *, is_black: bool, block_rows: int):
     op = op_0_ref[...]
     up_row = op_m1_ref[...][-1:, :]
@@ -65,17 +65,21 @@ def _kernel(seeds_ref, table_ref, target_ref, op_m1_ref, op_0_ref,
                          zero, seed, jnp.uint32(0))
     draws = lo + hi  # 8 uint32 per word
 
-    inv_temp = table_ref[0]
+    # integer-threshold accept (H1.6): the 10 uint32 thresholds live in
+    # SMEM; the per-nibble lookup is a select chain over scalar reads
+    # (Pallas kernels cannot vector-gather from SMEM) -- same uint32s as
+    # the oracle's jnp.take, so bit-exactness is preserved
+    thr = [thr_ref[c] for c in range(10)]
     flip_word = jnp.zeros_like(target)
     for nib in range(lat.SPINS_PER_WORD):
         sh = np.uint32(nib * _NIB)
         s = (target >> sh) & np.uint32(1)
         nn = (nn_words >> sh) & np.uint32(0xF)
-        # closed-form acceptance (gather-free, fusible; == LUT values)
-        p = jnp.exp(-2.0 * inv_temp * (2.0 * s.astype(jnp.float32) - 1.0)
-                    * (2.0 * nn.astype(jnp.float32) - 4.0))
-        u = crng.u32_to_uniform(draws[nib])
-        flip = (u < p).astype(jnp.uint32)
+        idx = s * np.uint32(5) + nn
+        t = jnp.zeros_like(idx)
+        for c in range(10):
+            t = jnp.where(idx == np.uint32(c), thr[c], t)
+        flip = (draws[nib] < t).astype(jnp.uint32)
         flip_word = flip_word | (flip << sh)
     out_ref[...] = target ^ flip_word
 
@@ -83,14 +87,20 @@ def _kernel(seeds_ref, table_ref, target_ref, op_m1_ref, op_0_ref,
 def multispin_update(target_words, op_words, inv_temp, *, is_black: bool,
                      seed: int = 0, offset=0,
                      block_rows: int = DEFAULT_BLOCK_ROWS,
-                     interpret: bool = False):
-    """One packed color half-sweep; bit-exact vs core.multispin oracle."""
+                     interpret: bool = False, thresholds=None):
+    """One packed color half-sweep; bit-exact vs core.multispin oracle.
+
+    ``thresholds`` takes a precomputed ``acceptance_thresholds(inv_temp)``
+    so sweep loops hoist the 10 exps out of their fori_loop (H1.6).
+    """
+    from repro.core import multispin as ms
     n, w = target_words.shape
     block_rows = min(block_rows, n)
     assert n % block_rows == 0 and block_rows % 2 == 0
     nb = n // block_rows
 
-    beta = jnp.array([inv_temp], jnp.float32)
+    if thresholds is None:
+        thresholds = ms.acceptance_thresholds(inv_temp)
     seeds = jnp.array([seed & 0xFFFFFFFF, offset], jnp.uint32)
 
     row_spec = pl.BlockSpec((block_rows, w), lambda i: (i, 0))
@@ -99,7 +109,7 @@ def multispin_update(target_words, op_words, inv_temp, *, is_black: bool,
         grid=(nb,),
         in_specs=[
             pl.BlockSpec(memory_space=pltpu.SMEM),   # seed/offset
-            pl.BlockSpec(memory_space=pltpu.SMEM),   # inv_temp
+            pl.BlockSpec(memory_space=pltpu.SMEM),   # acceptance thresholds
             row_spec,
             pl.BlockSpec((block_rows, w), lambda i: ((i - 1) % nb, 0)),
             row_spec,
@@ -109,4 +119,4 @@ def multispin_update(target_words, op_words, inv_temp, *, is_black: bool,
         out_shape=jax.ShapeDtypeStruct(target_words.shape,
                                        target_words.dtype),
         interpret=interpret,
-    )(seeds, beta, target_words, op_words, op_words, op_words)
+    )(seeds, thresholds, target_words, op_words, op_words, op_words)

@@ -10,11 +10,15 @@ from .stencil import stencil_update
 
 
 @functools.partial(jax.jit, static_argnames=("n_sweeps", "seed",
-                                             "block_rows", "interpret"))
+                                             "block_rows", "interpret"),
+                   donate_argnums=(0, 1))
 def run_sweeps_stencil(black, white, inv_temp, n_sweeps: int, seed: int = 0,
                        start_offset=0, block_rows: int = 256,
                        interpret: bool = False):
-    """n_sweeps full sweeps with in-kernel Philox (fused single-pass)."""
+    """n_sweeps full sweeps with in-kernel Philox (fused single-pass).
+
+    The plane buffers are donated (H1.8): callers rebind ``b, w = ...``.
+    """
     start_offset = jnp.uint32(start_offset)
 
     def body(i, carry):

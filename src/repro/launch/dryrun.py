@@ -184,8 +184,9 @@ def lower_lm_cell(arch: str, shape_name: str, mesh, *, fsdp=None,
 # ---------------------------------------------------------------------------
 
 def lower_ising_cell(shape_name: str, mesh, engine: str = "multispin"):
-    """Distributed Ising sweep on packed uint32 words (multispin) or int8
-    planes (basic), pencil-decomposed over the whole mesh."""
+    """Distributed Ising sweep on packed uint32 words (multispin), 32
+    replica bitplanes (bitplane, DESIGN.md S8), or int8 planes (basic),
+    pencil-decomposed over the whole mesh."""
     from repro.core import distributed as dist
 
     n, m = ISING_SHAPES[shape_name]
@@ -195,6 +196,12 @@ def lower_ising_cell(shape_name: str, mesh, engine: str = "multispin"):
         half_words = m // 2 // 8
         black = jax.ShapeDtypeStruct((n, half_words), jnp.uint32)
         white = jax.ShapeDtypeStruct((n, half_words), jnp.uint32)
+    elif engine == "bitplane":
+        step_fn, sharding = dist.make_bitplane_ising_step(mesh, n=n, m=m,
+                                                          seed=0,
+                                                          n_sweeps=1)
+        black = jax.ShapeDtypeStruct((n, m // 2), jnp.uint32)
+        white = jax.ShapeDtypeStruct((n, m // 2), jnp.uint32)
     else:
         step_fn, sharding = dist.make_ising_step(mesh, n=n, m=m, seed=0,
                                                  n_sweeps=1)
@@ -293,7 +300,8 @@ def run_cell(arch: str, shape_name: str, mesh_kind: str, *,
 def main(argv=None) -> int:
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="all",
-                    help="arch id | all | ising-multispin | ising-basic")
+                    help="arch id | all | ising-multispin | "
+                         "ising-bitplane | ising-basic")
     ap.add_argument("--shape", default="all")
     ap.add_argument("--mesh", default="both",
                     choices=["single", "multi", "both"])

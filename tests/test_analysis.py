@@ -93,20 +93,24 @@ def test_measurement_plan_validation():
 def test_observables_hook_energy_ground_state(engine):
     """All-up lattice: e = -2 for every uniform-J engine (each spin has 4
     aligned bonds counted once per pair); spinglass weights its quenched
-    couplings instead, so e = -<J> over bonds."""
+    couplings instead, so e = -<J> over bonds.  Replicated engines
+    (bitplane) return per-replica vectors; from_full broadcasts, so
+    every replica must agree."""
     cfg = SimConfig(n=16, m=16, temperature=2.0, seed=5, engine=engine,
                     tc_block=4)
     sim = Simulation(cfg)
     state = sim.engine.from_full(jnp.ones((16, 16), jnp.int8))
     o = sim.engine.observables(state, jnp.float32(cfg.inv_temp))
-    assert float(o["m"]) == 1.0
+    m = np.asarray(o["m"], np.float32)
+    assert m.size == sim.engine.replicas
+    assert (m == 1.0).all()
     if engine == "spinglass":
         _, j_up, j_left = state
         expect = -(np.asarray(j_up, np.float32).sum()
                    + np.asarray(j_left, np.float32).sum()) / 256.0
         assert float(o["e"]) == pytest.approx(expect)
     else:
-        assert float(o["e"]) == -2.0
+        assert (np.asarray(o["e"], np.float32) == -2.0).all()
 
 
 @pytest.mark.parametrize("engine", sorted(ENGINES))
@@ -114,13 +118,15 @@ def test_sim_energy_routes_through_hook(engine):
     sim = Simulation(SimConfig(n=16, m=16, temperature=2.0, seed=6,
                                engine=engine, tc_block=4))
     sim.run(2)
-    hook = float(sim.engine.observables(
-        sim.state, jnp.float32(sim.config.inv_temp))["e"])
-    assert sim.energy() == hook
-    # layout-independent oracle on the full-lattice view
+    hook = np.asarray(sim.engine.observables(
+        sim.state, jnp.float32(sim.config.inv_temp))["e"], np.float32)
+    # scalar engines: exact identity; replicated engines: replica mean
+    assert sim.energy() == pytest.approx(float(hook.mean()), rel=1e-6)
+    # layout-independent oracle on the full-lattice view (replica 0 for
+    # replicated engines -- full_lattice is the replica-0 view)
     if engine != "spinglass":
         full = sim.full_lattice()
-        assert hook == float(obs.energy_per_spin_full(full))
+        assert hook.reshape(-1)[0] == float(obs.energy_per_spin_full(full))
 
 
 # ---------------------------------------------------------------------------

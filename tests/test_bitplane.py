@@ -1,0 +1,361 @@
+"""Bitplane engine (32 replicas/word, DESIGN.md S8): packing properties,
+carry-save adder, kernel/oracle bit-exactness, shared-draw budget,
+per-replica measurement flow, and the statistical physics cross-check."""
+import json
+import os
+import subprocess
+import sys
+import textwrap
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from _hypothesis_compat import given, settings, st
+
+from repro.core import bitplane as bp
+from repro.core import lattice as lat
+from repro.core import metropolis as metro
+from repro.core import multispin as ms
+from repro.core import rng as crng
+from repro.core.sim import SimConfig, Simulation
+from repro.kernels.bitplane.bitplane import bitplane_update
+from repro.kernels.bitplane.ops import run_sweeps_bitplane_kernel
+from repro.kernels.bitplane.ref import bitplane_update_ref
+
+dims = st.tuples(st.integers(1, 8).map(lambda x: 2 * x),
+                 st.integers(1, 8).map(lambda x: 4 * x))
+
+
+def _replica_stack(key, n, m, n_rep=bp.N_REPLICAS):
+    keys = jax.vmap(lambda r: jax.random.fold_in(key, r))(
+        jnp.arange(n_rep))
+    return jax.vmap(lambda k: lat.init_lattice(k, n, m))(keys)
+
+
+# ---------------------------------------------------------------------------
+# packing
+# ---------------------------------------------------------------------------
+
+
+@given(dims=dims, seed=st.integers(0, 2**31 - 1))
+@settings(max_examples=25, deadline=None)
+def test_pack_unpack_roundtrip(dims, seed):
+    n, c = dims
+    rng = np.random.default_rng(seed)
+    planes = rng.integers(0, 2, size=(bp.N_REPLICAS, n, c)).astype(np.uint32)
+    words = bp.pack_replicas(jnp.asarray(planes))
+    assert words.shape == (n, c) and words.dtype == jnp.uint32
+    np.testing.assert_array_equal(np.asarray(bp.unpack_replicas(words)),
+                                  planes)
+    # and words -> planes -> words
+    w2 = bp.pack_replicas(bp.unpack_replicas(words))
+    np.testing.assert_array_equal(np.asarray(w2), np.asarray(words))
+
+
+def test_pack_lattices_roundtrip_and_replica_view():
+    fulls = _replica_stack(jax.random.PRNGKey(0), 16, 32)
+    bw, ww = bp.pack_lattices(fulls)
+    np.testing.assert_array_equal(np.asarray(bp.unpack_lattices(bw, ww)),
+                                  np.asarray(fulls))
+    for r in (0, 1, 31):
+        np.testing.assert_array_equal(
+            np.asarray(bp.replica_lattice(bw, ww, r=r)),
+            np.asarray(fulls[r]), err_msg=f"replica {r}")
+
+
+# ---------------------------------------------------------------------------
+# carry-save adder
+# ---------------------------------------------------------------------------
+
+
+def test_carry_save_adder_matches_integer_sums():
+    """n0 + 2*n1 + 4*n2 equals the per-replica integer sum of the four
+    input bits, for every replica lane of random words."""
+    rng = np.random.default_rng(1)
+    words = rng.integers(0, 2**32, size=(4, 8, 16), dtype=np.uint64)
+    a, b, c, d = (jnp.asarray(w.astype(np.uint32)) for w in words)
+    n0, n1, n2 = (np.asarray(x) for x in bp.bit_count_neighbors(a, b, c, d))
+    bits = [(words[i].astype(np.uint32)[None] >> np.arange(32)[:, None,
+                                                             None]) & 1
+            for i in range(4)]
+    expect = sum(bits)                       # (32, 8, 16) in 0..4
+    got = (((n0[None] >> np.arange(32)[:, None, None]) & 1)
+           + 2 * ((n1[None] >> np.arange(32)[:, None, None]) & 1)
+           + 4 * ((n2[None] >> np.arange(32)[:, None, None]) & 1))
+    np.testing.assert_array_equal(got, expect)
+
+
+def test_neighbor_counts_match_basic_engine_per_replica():
+    """The bit-sliced neighbor count of every replica equals the basic
+    engine's +-1 neighbor sums on that replica's plane."""
+    fulls = _replica_stack(jax.random.PRNGKey(2), 8, 16)
+    bw, ww = bp.pack_lattices(fulls)
+    n0, n1, n2 = bp.neighbor_counts(ww, is_black=True)
+    for r in (0, 5, 31):
+        _, white = lat.split_checkerboard(fulls[r])
+        nn_pm = np.asarray(metro.neighbor_sums(white, is_black=True))
+        count = (np.asarray((n0 >> r) & 1).astype(np.int32)
+                 + 2 * np.asarray((n1 >> r) & 1).astype(np.int32)
+                 + 4 * np.asarray((n2 >> r) & 1).astype(np.int32))
+        np.testing.assert_array_equal(2 * count - 4, nn_pm,
+                                      err_msg=f"replica {r}")
+
+
+# ---------------------------------------------------------------------------
+# kernel vs oracle
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("n,m", [(16, 32), (64, 64)])
+@pytest.mark.parametrize("is_black", [True, False])
+@pytest.mark.parametrize("block_rows", [8, 16])
+def test_bitplane_kernel_bitexact(n, m, is_black, block_rows):
+    fulls = _replica_stack(jax.random.PRNGKey(3), n, m)
+    bw, ww = bp.pack_lattices(fulls)
+    t, op = (bw, ww) if is_black else (ww, bw)
+    beta = jnp.float32(1 / 2.3)
+    out_k = bitplane_update(t, op, beta, is_black=is_black, seed=11,
+                            offset=3, block_rows=block_rows, interpret=True)
+    out_r = bitplane_update_ref(t, op, beta, is_black=is_black, seed=11,
+                                offset=3)
+    np.testing.assert_array_equal(np.asarray(out_k), np.asarray(out_r))
+
+
+def test_bitplane_kernel_sweep_wrapper_matches_core():
+    fulls = _replica_stack(jax.random.PRNGKey(4), 16, 32)
+    bw, ww = bp.pack_lattices(fulls)
+    beta = jnp.float32(1 / 2.0)
+    # both wrappers donate their inputs: hand each its own copy
+    bk, wk = run_sweeps_bitplane_kernel(bw.copy(), ww.copy(), beta, 5,
+                                        seed=2, block_rows=8,
+                                        interpret=True)
+    br, wr = bp.run_sweeps_bitplane(bw, ww, beta, 5, seed=2)
+    np.testing.assert_array_equal(np.asarray(bk), np.asarray(br))
+    np.testing.assert_array_equal(np.asarray(wk), np.asarray(wr))
+
+
+# ---------------------------------------------------------------------------
+# randomness budget: ONE shared draw per site
+# ---------------------------------------------------------------------------
+
+
+def test_philox_draw_budget_one_per_word(monkeypatch):
+    """The bitplane half-sweep consumes exactly ONE uint32 per site word
+    (1/32 per replica-spin); nibble multispin consumes 8 per word (1 per
+    spin) -- the 32x draw reduction, counted at the philox4x32 seam."""
+    drawn = {"n": 0}
+    real = crng.philox4x32
+
+    def counting(c0, c1, c2, c3, k0, k1, rounds=10):
+        drawn["n"] += 4 * int(np.prod(jnp.shape(c2)))
+        return real(c0, c1, c2, c3, k0, k1, rounds)
+
+    monkeypatch.setattr(crng, "philox4x32", counting)
+    beta = jnp.float32(1 / 2.2)
+
+    n, m = 16, 32
+    fulls = _replica_stack(jax.random.PRNGKey(5), n, m)
+    bw, ww = bp.pack_lattices(fulls)
+    sites = n * (m // 2)
+    drawn["n"] = 0
+    bp.update_color_bitplane(bw, ww, beta, True, 3, jnp.uint32(0))
+    assert drawn["n"] == sites          # 1 draw/word = 1/32 per replica
+    bitplane_per_replica_spin = drawn["n"] / (bp.N_REPLICAS * sites)
+
+    b, w = lat.split_checkerboard(lat.init_lattice(jax.random.PRNGKey(6),
+                                                   n, m))
+    pbw, pww = ms.pack_lattice(b, w)
+    words = n * (m // 2) // lat.SPINS_PER_WORD
+    drawn["n"] = 0
+    ms.update_color_packed(pbw, pww, beta, True, 3, jnp.uint32(0))
+    assert drawn["n"] == 8 * words      # 8 draws per 8-spin word
+    multispin_per_spin = drawn["n"] / (lat.SPINS_PER_WORD * words)
+
+    assert multispin_per_spin / bitplane_per_replica_spin == 32.0
+
+
+# ---------------------------------------------------------------------------
+# measurement flow: per-replica trajectories through measure_scan
+# ---------------------------------------------------------------------------
+
+
+def test_trajectory_is_per_replica_and_scan_matches_loop():
+    """One simulation yields 32 per-replica magnetization series; the
+    fused scan reproduces the stateful python loop bit-for-bit."""
+    from repro.analysis import MeasurementPlan, jackknife
+    cfg = dict(n=16, m=16, temperature=2.2, seed=7, engine="bitplane")
+    a = Simulation(SimConfig(**cfg))
+    a.run(4)
+    legacy = []
+    for _ in range(6):
+        a.run(2)
+        legacy.append(np.asarray(
+            a.engine.observables(a.state, jnp.float32(1 / 2.2))["m"]))
+    legacy = np.stack(legacy).astype(np.float32)
+
+    b = Simulation(SimConfig(**cfg))
+    traj = b.measure(MeasurementPlan(6, 2, thermalize=4, fields=("m", "e")))
+    assert traj["m"].shape == traj["e"].shape == (6, bp.N_REPLICAS)
+    np.testing.assert_array_equal(traj["m"], legacy)
+    np.testing.assert_array_equal(np.asarray(a.state[0]),
+                                  np.asarray(b.state[0]))
+    # per-replica series feed the estimators unchanged
+    ests = [jackknife(np.abs(traj["m"][:, r]), n_blocks=3)
+            for r in range(bp.N_REPLICAS)]
+    assert all(err >= 0 for _, err in ests)
+
+
+def test_bitplane_pallas_engine_matches_oracle_engine():
+    cfg = dict(n=32, m=32, temperature=2.2, seed=7)
+    a = Simulation(SimConfig(engine="bitplane", **cfg))
+    b = Simulation(SimConfig(engine="bitplane_pallas", **cfg))
+    a.run(5)
+    b.run(5)
+    np.testing.assert_array_equal(np.asarray(a.state[0]),
+                                  np.asarray(b.state[0]))
+    np.testing.assert_array_equal(np.asarray(a.state[1]),
+                                  np.asarray(b.state[1]))
+
+
+def test_ensemble_batched_measure_keeps_replica_axis():
+    from repro.analysis import MeasurementPlan
+    from repro.core.ensemble import Ensemble
+    temps, seeds = [1.8, 2.5], [3, 4]
+    ens = Ensemble(16, 16, temps, seeds, engine="bitplane")
+    traj = ens.measure(MeasurementPlan(4, 2, thermalize=2))
+    assert traj["m"].shape == (4, 2, bp.N_REPLICAS)
+    # member i reproduces its single Simulation (replica streams and all)
+    for i, (T, s) in enumerate(zip(temps, seeds)):
+        sim = Simulation(SimConfig(n=16, m=16, temperature=T, seed=s,
+                                   engine="bitplane"))
+        t1 = sim.measure(MeasurementPlan(4, 2, thermalize=2))
+        np.testing.assert_array_equal(t1["m"], traj["m"][:, i],
+                                      err_msg=f"member {i}")
+
+
+# ---------------------------------------------------------------------------
+# physics: replica-averaged observables vs basic_philox
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("temp,ordered", [(2.0, True), (2.5, False)])
+def test_statistical_cross_check_vs_basic_philox(temp, ordered):
+    """Replica-averaged <|m|> and <e> from ONE bitplane simulation agree
+    with an independent basic_philox chain within jackknife error bars.
+
+    The replica average is taken per time-sample FIRST (series y_t =
+    mean_r x_{r,t}) and the error bar comes from a block jackknife over
+    time -- the correct treatment under the shared-randoms caveat
+    (replicas are correlated at equal (site, step), so they must not be
+    counted as 32 independent measurements; see DESIGN.md S8)."""
+    from repro.analysis import MeasurementPlan, jackknife
+    p_up = 1.0 if ordered else 0.5
+    plan = MeasurementPlan(n_measure=64, sweeps_between=2, thermalize=300)
+
+    sim_b = Simulation(SimConfig(n=32, m=32, temperature=temp, seed=5,
+                                 engine="bitplane", init_p_up=p_up))
+    traj_b = sim_b.measure(plan)
+    sim_p = Simulation(SimConfig(n=32, m=32, temperature=temp, seed=6,
+                                 engine="basic_philox", init_p_up=p_up))
+    traj_p = sim_p.measure(plan)
+
+    for field, transform in (("m", np.abs), ("e", lambda x: x)):
+        series_b = transform(traj_b[field]).mean(axis=1)  # replica-avg
+        series_p = transform(traj_p[field])
+        est_b, err_b = jackknife(series_b)
+        est_p, err_p = jackknife(series_p)
+        sigma = np.hypot(err_b, err_p)
+        assert abs(est_b - est_p) < 4.0 * sigma + 0.02, (
+            field, temp, est_b, err_b, est_p, err_p)
+
+
+def _distinct_replicas(state):
+    black, white = (np.asarray(p) for p in state)
+    return len({(((black >> r) & 1).tobytes(), ((white >> r) & 1).tobytes())
+                for r in range(bp.N_REPLICAS)})
+
+
+def test_replica_coalescence_regimes():
+    """Characterizes the shared-randoms coupling (DESIGN.md S8): above
+    T_c the 32 chains stay distinct (the replica multiplier is real);
+    below T_c same-well replicas coalesce to bit-identical lattices (at
+    most the +-m pair plus stragglers survives); identical starts are
+    clones forever."""
+    hot = Simulation(SimConfig(n=32, m=32, temperature=2.5, seed=11,
+                               engine="bitplane"))
+    hot.run(400)
+    assert _distinct_replicas(hot.state) == bp.N_REPLICAS
+
+    cold = Simulation(SimConfig(n=32, m=32, temperature=2.0, seed=11,
+                                engine="bitplane"))
+    cold.run(400)
+    assert _distinct_replicas(cold.state) <= 4
+
+    clones = Simulation(SimConfig(n=32, m=32, temperature=2.5, seed=11,
+                                  engine="bitplane", init_p_up=1.0))
+    assert _distinct_replicas(clones.state) == 1
+    clones.run(50)
+    assert _distinct_replicas(clones.state) == 1
+
+
+# ---------------------------------------------------------------------------
+# distributed: 8-host-device mesh reproduces the single-device trajectory
+# ---------------------------------------------------------------------------
+
+_DIST_SCRIPT = textwrap.dedent("""
+    import os
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    import jax, jax.numpy as jnp, numpy as np, json
+    from repro.core import bitplane as bp, distributed as dist, \\
+        lattice as lat
+    from repro.launch.mesh import make_mesh
+
+    N, M = 32, 32
+    key = jax.random.PRNGKey(7)
+    keys = jax.vmap(lambda r: jax.random.fold_in(key, r))(jnp.arange(32))
+    fulls = jax.vmap(lambda k: lat.init_lattice(k, N, M))(keys)
+    bw, ww = bp.pack_lattices(fulls)
+    beta = jnp.float32(1 / 2.0)
+
+    out = {}
+    results = {}
+    for shape, axes in [((2, 2, 2), ("pod", "data", "model")),
+                        ((4, 2), ("data", "model")),
+                        ((1, 8), ("data", "model"))]:
+        mesh = make_mesh(shape, axes)
+        step, sh = dist.make_bitplane_ising_step(mesh, n=N, m=M, seed=5,
+                                                 n_sweeps=3)
+        b1, w1 = step(jax.device_put(bw, sh), jax.device_put(ww, sh),
+                      beta, jnp.uint32(0))
+        results["x".join(map(str, shape))] = (np.asarray(b1),
+                                              np.asarray(w1))
+
+    # reference last: run_sweeps_bitplane donates bw/ww
+    br, wr = bp.run_sweeps_bitplane(bw, ww, beta, 3, seed=5)
+    br, wr = np.asarray(br), np.asarray(wr)
+    for k, (b1, w1) in results.items():
+        out["match_" + k] = bool((b1 == br).all() and (w1 == wr).all())
+    print(json.dumps(out))
+""")
+
+
+@pytest.fixture(scope="module")
+def bitplane_dist_results():
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.join(os.path.dirname(__file__), "..",
+                                     "src")
+    env.pop("XLA_FLAGS", None)
+    proc = subprocess.run([sys.executable, "-c", _DIST_SCRIPT], env=env,
+                          capture_output=True, text=True, timeout=600)
+    assert proc.returncode == 0, proc.stderr[-3000:]
+    return json.loads(proc.stdout.strip().splitlines()[-1])
+
+
+def test_distributed_bitplane_bitexact_all_meshes(bitplane_dist_results):
+    """Global (site//4, site%4) Philox keying makes the halo-exchanged
+    step independent of the device grid: every mesh reproduces the
+    single-device bitplane trajectory bit-for-bit."""
+    assert bitplane_dist_results["match_2x2x2"]
+    assert bitplane_dist_results["match_4x2"]
+    assert bitplane_dist_results["match_1x8"]

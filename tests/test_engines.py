@@ -70,7 +70,8 @@ def test_acceptance_table_values():
 
 
 @pytest.mark.parametrize("engine", ["basic", "basic_philox", "multispin",
-                                    "tensorcore", "stencil_pallas"])
+                                    "tensorcore", "stencil_pallas",
+                                    "bitplane"])
 def test_low_temperature_orders(engine):
     """T=1.5 < Tc: |m| must stay at Onsager's 0.9865 on every engine.
 
@@ -85,7 +86,8 @@ def test_low_temperature_orders(engine):
     assert m > 0.93, (engine, m)
 
 
-@pytest.mark.parametrize("engine", ["basic_philox", "multispin"])
+@pytest.mark.parametrize("engine", ["basic_philox", "multispin",
+                                    "bitplane"])
 def test_high_temperature_disorders(engine):
     """T=5 >> Tc: |m| ~ 0."""
     sim = Simulation(SimConfig(n=64, m=64, temperature=5.0, seed=4,
@@ -115,10 +117,10 @@ def test_binder_limits():
 
 # -- registry-driven cross-engine contracts ---------------------------------
 
-def test_registry_contains_all_seven_engines():
+def test_registry_contains_all_engines():
     assert set(ALL_ENGINES) >= {"basic", "basic_philox", "multispin",
                                 "tensorcore", "stencil_pallas", "wolff",
-                                "spinglass"}
+                                "spinglass", "bitplane", "bitplane_pallas"}
 
 
 def test_unknown_engine_rejected():
@@ -160,8 +162,10 @@ def test_registry_checkpoint_roundtrip_bitexact(engine, tmp_path):
 def test_counter_engines_match_legacy_wrappers():
     """The registry sweep path and the standalone run_sweeps_* wrappers
     share one Philox offset scheme (same stream, same checkpoints)."""
+    from repro.core import bitplane as bp
     full = lat.init_lattice(jax.random.PRNGKey(4), 16, 32)
     b, w = lat.split_checkerboard(full)
+    packed = ms.pack_lattice(b, w)  # before the donating wrapper calls
     beta = jnp.float32(1 / 2.1)
     cfg = SimConfig(n=16, m=32, temperature=2.1, seed=3)
 
@@ -171,12 +175,18 @@ def test_counter_engines_match_legacy_wrappers():
     np.testing.assert_array_equal(np.asarray(be), np.asarray(bw_ref))
     np.testing.assert_array_equal(np.asarray(we), np.asarray(ww_ref))
 
-    packed = ms.pack_lattice(b, w)
     eng = ENGINES["multispin"](cfg)
     be, we = eng.sweep_fn(packed, beta, 3, 0, 4)
     bp_ref, wp_ref = ms.run_sweeps_packed(*packed, beta, 4, seed=3)
     np.testing.assert_array_equal(np.asarray(be), np.asarray(bp_ref))
     np.testing.assert_array_equal(np.asarray(we), np.asarray(wp_ref))
+
+    eng = ENGINES["bitplane"](cfg)
+    state = eng.init_state(jax.random.PRNGKey(3))
+    be, we = eng.sweep_fn(state, beta, 3, 0, 4)
+    bb_ref, wb_ref = bp.run_sweeps_bitplane(*state, beta, 4, seed=3)
+    np.testing.assert_array_equal(np.asarray(be), np.asarray(bb_ref))
+    np.testing.assert_array_equal(np.asarray(we), np.asarray(wb_ref))
 
 
 def test_restore_rejects_pre_registry_checkpoint(tmp_path):

@@ -5,7 +5,8 @@ import pytest
 from repro.core.ensemble import Ensemble
 from repro.core.sim import SimConfig, Simulation
 
-COUNTER_ENGINES = ("basic_philox", "multispin", "stencil_pallas")
+COUNTER_ENGINES = ("basic_philox", "multispin", "stencil_pallas",
+                   "bitplane")
 
 
 @pytest.mark.parametrize("engine", COUNTER_ENGINES)

@@ -82,17 +82,17 @@ def test_multisweep_wrappers_match_core():
     """ops.py sweep loops == core engine sweep loops, multi-iteration."""
     full = lat.init_lattice(jax.random.PRNGKey(5), 32, 64)
     b, w = lat.split_checkerboard(full)
+    bw, ww = ms.pack_lattice(b, w)  # before the donating philox call
     beta = jnp.float32(1 / 2.0)
-    bk, wk = run_sweeps_stencil(b, w, beta, 5, seed=2, block_rows=8,
-                                interpret=True)
+    bk, wk = run_sweeps_stencil(b.copy(), w.copy(), beta, 5, seed=2,
+                                block_rows=8, interpret=True)  # donates
     from repro.core.metropolis import run_sweeps_philox
-    br, wr = run_sweeps_philox(b, w, beta, 5, seed=2)
+    br, wr = run_sweeps_philox(b, w, beta, 5, seed=2)  # donates b, w
     np.testing.assert_array_equal(np.asarray(bk), np.asarray(br))
 
-    bw, ww = ms.pack_lattice(b, w)
-    bk2, wk2 = run_sweeps_multispin(bw, ww, beta, 5, seed=2, block_rows=8,
-                                    interpret=True)
-    br2, wr2 = ms.run_sweeps_packed(bw, ww, beta, 5, seed=2)
+    bk2, wk2 = run_sweeps_multispin(bw.copy(), ww.copy(), beta, 5, seed=2,
+                                    block_rows=8, interpret=True)  # donates
+    br2, wr2 = ms.run_sweeps_packed(bw, ww, beta, 5, seed=2)  # donates
     np.testing.assert_array_equal(np.asarray(bk2), np.asarray(br2))
     np.testing.assert_array_equal(np.asarray(wk2), np.asarray(wr2))
 
