@@ -41,20 +41,31 @@ def _model_flops_ratio(r):
 
 
 def diff(old_path, new_path):
-    """Markdown diff of two BENCH_<stamp>.json records by row name."""
+    """Markdown diff of two BENCH_<stamp>.json records by row name.
+
+    When the NEW record was a filtered run (``--only``/``--engines`` in
+    its meta), baseline rows outside the filter were never attempted --
+    they are skipped rather than reported as "removed", so the CI smoke
+    subset diffs cleanly against a full committed baseline.
+    """
     with open(old_path) as f:
         old = json.load(f)
     with open(new_path) as f:
         new = json.load(f)
     old_rows = {r["name"]: r for r in old["rows"]}
     new_rows = {r["name"]: r for r in new["rows"]}
+    filtered = bool(new["meta"].get("only") or new["meta"].get("engines"))
     print(f"### Bench diff — {old['meta'].get('stamp', old_path)} → "
-          f"{new['meta'].get('stamp', new_path)}\n")
+          f"{new['meta'].get('stamp', new_path)}"
+          + (" (filtered run: unselected baseline rows skipped)"
+             if filtered else "") + "\n")
     print("| bench | old us/call | new us/call | Δ% | old flips/ns |"
           " new flips/ns |")
     print("|---|---|---|---|---|---|")
     for name in sorted(set(old_rows) | set(new_rows)):
         o, n = old_rows.get(name), new_rows.get(name)
+        if n is None and filtered:
+            continue
         if o is None or n is None:
             status = "added" if o is None else "removed"
             ou = "-" if o is None else f"{o['us_per_call']:.1f}"

@@ -283,6 +283,48 @@ def table1_bitplane(n=256, sweeps=10, pallas_n=64, pallas_sweeps=2):
 
 
 # ---------------------------------------------------------------------------
+# Table 1 addendum: resident-sweep tier (DESIGN.md S9) -- k full sweeps
+# per kernel dispatch, spins VMEM-resident, vs the per-half-sweep tier
+# ---------------------------------------------------------------------------
+
+def table1_resident(n=64, k=8):
+    """Resident vs per-half-sweep tier on the three Pallas families.
+
+    A k-sweep block is ONE resident kernel dispatch (both planes staged
+    into VMEM once) vs 2k per-half-sweep kernel dispatches (each
+    round-tripping both planes through HBM).  The fallback engine is
+    the same object with its VMEM plan cleared, so the two rows differ
+    ONLY in tier.  On this CPU container both tiers run the Pallas
+    interpreter, so the speedup mostly reflects dispatch overhead; on
+    TPU the HBM-traffic ratio dominates (EXPERIMENTS.md H1.9)."""
+    from repro.core.engine import ENGINES, make_engine
+    from repro.core.sim import SimConfig
+    for name in ("stencil_pallas", "multispin_pallas", "bitplane_pallas"):
+        if not _engine_selected(name):
+            continue
+        cfg = SimConfig(n=n, m=n, temperature=2.27, seed=1, engine=name)
+        reps = ENGINES[name].replicas
+        flips = reps * n * n * k
+
+        eng = make_engine(cfg)
+        assert eng.resident_plan is not None, (name, n)
+        state = eng.init_state(jax.random.PRNGKey(0))
+        dt_res, _ = _timeit(_sweep_stepper(eng, state, k), iters=2)
+
+        fb = make_engine(cfg)
+        fb.resident_plan = None   # force the per-half-sweep tier
+        state = fb.init_state(jax.random.PRNGKey(0))
+        dt_half, _ = _timeit(_sweep_stepper(fb, state, k), iters=2)
+
+        _row(f"t1_resident_{name}_{n}_k{k}", dt_res * 1e6,
+             f"k_sweeps_per_dispatch={k};kernel_dispatches_per_block=1;"
+             f"halfsweep_dispatches_per_block={2 * k};"
+             f"flips_per_ns={flips / dt_res / 1e9:.4f};"
+             f"halfsweep_flips_per_ns={flips / dt_half / 1e9:.4f};"
+             f"speedup_vs_halfsweep={dt_half / dt_res:.2f}")
+
+
+# ---------------------------------------------------------------------------
 # Fig 5/6: physics validation vs Onsager
 # ---------------------------------------------------------------------------
 
@@ -375,7 +417,7 @@ def main() -> None:
         "engines": args.engines})
 
     benches = [table1_single_device, table1_measure_fusion,
-               table1_bitplane, table2_multispin_sizes,
+               table1_bitplane, table1_resident, table2_multispin_sizes,
                table2_ensemble_batch, table3_weak_scaling,
                table4_strong_scaling, table5_packed_scaling,
                fig5_validation, kernel_block_sweep, roofline_summary]

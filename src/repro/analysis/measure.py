@@ -22,6 +22,17 @@ Two entry points share the compiled body:
 
 ``DISPATCH_COUNT`` increments once per compiled-call invocation; tests
 and the fusion bench read it to assert the one-dispatch contract.
+
+Resident-tier composition (DESIGN.md S9): the scan body advances each
+measure interval through ``Engine.scan_step`` -> ``sweep_fn``, so on a
+resident-capable engine whose lattice fits the VMEM plan every
+``sweeps_between``-sized sweep block lowers to exactly ONE k-sweep
+resident kernel call (k = ``sweeps_between``) inside the scan -- the
+spins stay in VMEM for the whole interval and touch HBM once per
+sample, instead of 2x per sweep.  No code here knows about the tier;
+the mapping falls out of the registry dispatch, and bit-exactness of
+the samples is guaranteed by the shared Philox counter layout
+(``core.rng.half_sweep_offset``, tested in tests/test_resident.py).
 """
 from __future__ import annotations
 

@@ -209,11 +209,12 @@ def run_sweeps_bitplane(black_words, white_words, inv_temp, n_sweeps: int,
 
     def body(i, carry):
         b, w = carry
-        off = start_offset + 2 * jnp.uint32(i)
-        b = update_color_bitplane(b, w, inv_temp, True, seed, off,
-                                  thresholds)
-        w = update_color_bitplane(w, b, inv_temp, False, seed, off + 1,
-                                  thresholds)
+        b = update_color_bitplane(b, w, inv_temp, True, seed,
+                                  crng.half_sweep_offset(start_offset, i,
+                                                         0), thresholds)
+        w = update_color_bitplane(w, b, inv_temp, False, seed,
+                                  crng.half_sweep_offset(start_offset, i,
+                                                         1), thresholds)
         return (b, w)
 
     return jax.lax.fori_loop(0, n_sweeps, body,

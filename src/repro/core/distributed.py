@@ -164,10 +164,11 @@ def update_color_dist(target, op, inv_temp, is_black, seed, offset,
 
 def sweep_dist(black, white, inv_temp, seed, sweep_index, global_cols,
                row_axes, col_axes):
-    off = 2 * jnp.uint32(sweep_index)
-    black = update_color_dist(black, white, inv_temp, True, seed, off,
+    black = update_color_dist(black, white, inv_temp, True, seed,
+                              crng.half_sweep_offset(0, sweep_index, 0),
                               global_cols, row_axes, col_axes)
-    white = update_color_dist(white, black, inv_temp, False, seed, off + 1,
+    white = update_color_dist(white, black, inv_temp, False, seed,
+                              crng.half_sweep_offset(0, sweep_index, 1),
                               global_cols, row_axes, col_axes)
     return black, white
 
@@ -266,9 +267,12 @@ def make_packed_ising_step(mesh, *, n: int, m: int, seed: int = 0,
 
         def body(i, carry):
             b, w = carry
-            off = sweep0 + 2 * jnp.uint32(i)
-            b = update_packed(b, w, True, off, thresholds)
-            w = update_packed(w, b, False, off + 1, thresholds)
+            b = update_packed(b, w, True,
+                              crng.half_sweep_offset(sweep0, i, 0),
+                              thresholds)
+            w = update_packed(w, b, False,
+                              crng.half_sweep_offset(sweep0, i, 1),
+                              thresholds)
             return b, w
         return jax.lax.fori_loop(0, n_sweeps, body, (black, white))
 
@@ -357,9 +361,12 @@ def make_bitplane_ising_step(mesh, *, n: int, m: int, seed: int = 0,
 
         def body(i, carry):
             b, w = carry
-            off = sweep0 + 2 * jnp.uint32(i)
-            b = update_bitplane(b, w, True, off, thresholds)
-            w = update_bitplane(w, b, False, off + 1, thresholds)
+            b = update_bitplane(b, w, True,
+                                crng.half_sweep_offset(sweep0, i, 0),
+                                thresholds)
+            w = update_bitplane(w, b, False,
+                                crng.half_sweep_offset(sweep0, i, 1),
+                                thresholds)
             return b, w
         return jax.lax.fori_loop(0, n_sweeps, body, (black, white))
 

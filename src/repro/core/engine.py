@@ -1,4 +1,4 @@
-"""Pluggable engine registry: one protocol, nine update algorithms.
+"""Pluggable engine registry: one protocol, ten update algorithms.
 
 The paper's contribution is *comparing implementations* of the same 2D
 Ising Metropolis update; this module is the seam that makes the
@@ -40,7 +40,7 @@ Two hooks added for the measurement subsystem (DESIGN.md S7):
 """
 from __future__ import annotations
 
-from typing import Callable, ClassVar, Dict, Type
+from typing import Callable, ClassVar, Dict, Optional, Type
 
 import jax
 import jax.numpy as jnp
@@ -51,6 +51,7 @@ from . import lattice as lat
 from . import metropolis as metro
 from . import multispin as ms
 from . import observables as obs
+from . import rng as crng
 from . import spinglass as sg
 from . import tensorcore as tc
 from . import wolff as wolff_mod
@@ -152,9 +153,24 @@ class CounterEngine(Engine):
 
     counter_based = True
 
+    #: planner family key of the resident-sweep tier (DESIGN.md S9);
+    #: ``None`` = engine has no resident kernel.  Pallas-backed engines
+    #: set it; at construction the VMEM planner
+    #: (:func:`repro.kernels.resident.plan_resident`) decides whether
+    #: this lattice's planes fit per-core VMEM, and ``sweep_fn`` routes
+    #: every n-sweep dispatch through ONE resident kernel call when they
+    #: do -- ``Simulation``/``Ensemble``/``measure_scan`` pick the tier
+    #: up through the registry with no caller changes.
+    resident_family: ClassVar[Optional[str]] = None
+
     def __init__(self, config):
         super().__init__(config)
         self._jit_cache: Dict[int, Callable] = {}
+        self.resident_plan = None
+        if self.resident_family is not None:
+            from repro.kernels.resident import plan_resident
+            self.resident_plan = plan_resident(self.resident_family,
+                                               config.n, config.m)
 
     def color_update(self, target, op, inv_temp, is_black, seed, offset,
                      ctx=None):
@@ -171,17 +187,39 @@ class CounterEngine(Engine):
         fori_loop rather than left to XLA's LICM."""
         return None
 
+    def resident_sweeps(self, state, inv_temp, seed, start_offset,
+                        n_sweeps: int):
+        """Resident-tier dispatch (DESIGN.md S9): ``n_sweeps`` FULL
+        sweeps in ONE kernel call, both planes VMEM-resident, Philox
+        advanced in-kernel with the same (sweep, color) counter layout
+        (``rng.half_sweep_offset``) as the fallback loop below -- must
+        be bit-exact vs ``n_sweeps`` iterations of ``color_update``."""
+        raise NotImplementedError
+
     def sweep_fn(self, state, inv_temp, seed, start_offset, n_sweeps: int):
         """Pure sweep kernel: n_sweeps x (black, white) half-sweeps with
-        cuRAND-style offsets 2i / 2i+1 past ``start_offset``."""
+        cuRAND-style offsets 2i / 2i+1 past ``start_offset``.
+
+        Tiered (DESIGN.md S9): when the construction-time VMEM plan
+        exists, the whole n-sweep block is ONE resident kernel dispatch;
+        otherwise the per-half-sweep ``color_update`` fori_loop runs.
+        Both tiers share one Philox counter layout, so which tier ran is
+        unobservable in the trajectory (tested in tests/test_resident.py).
+        ``n_sweeps == 0`` takes the fallback path, whose fori_loop
+        no-ops, so the zero-sweep edge behaves alike on every tier.
+        """
+        if self.resident_plan is not None and n_sweeps > 0:
+            return tuple(self.resident_sweeps(state, inv_temp, seed,
+                                              start_offset, n_sweeps))
         start = jnp.uint32(start_offset)
         ctx = self.sweep_context(inv_temp)
 
         def body(i, carry):
             b, w = carry
-            off = start + 2 * jnp.uint32(i)
-            b = self.color_update(b, w, inv_temp, True, seed, off, ctx)
-            w = self.color_update(w, b, inv_temp, False, seed, off + 1, ctx)
+            b = self.color_update(b, w, inv_temp, True, seed,
+                                  crng.half_sweep_offset(start, i, 0), ctx)
+            w = self.color_update(w, b, inv_temp, False, seed,
+                                  crng.half_sweep_offset(start, i, 1), ctx)
             return (b, w)
 
         return jax.lax.fori_loop(0, n_sweeps, body, tuple(state))
@@ -278,6 +316,7 @@ class StencilPallasEngine(_PlanesEngine, CounterEngine):
     """
 
     name = "stencil_pallas"
+    resident_family = "stencil"
 
     def __init__(self, config):
         super().__init__(config)
@@ -291,6 +330,14 @@ class StencilPallasEngine(_PlanesEngine, CounterEngine):
                               seed=seed, offset=offset,
                               block_rows=self.block_rows,
                               interpret=self.interpret)
+
+    def resident_sweeps(self, state, inv_temp, seed, start_offset,
+                        n_sweeps):
+        from repro.kernels.stencil.resident import stencil_sweeps_resident
+        return stencil_sweeps_resident(*state, inv_temp,
+                                       n_sweeps=n_sweeps, seed=seed,
+                                       start_offset=start_offset,
+                                       interpret=self.interpret)
 
 
 # ---------------------------------------------------------------------------
@@ -327,6 +374,42 @@ class MultispinEngine(CounterEngine):
     def from_arrays(self, arrays):
         return (jnp.asarray(arrays["black_words"]),
                 jnp.asarray(arrays["white_words"]))
+
+
+@register
+class MultispinPallasEngine(MultispinEngine):
+    """Fused Pallas multispin kernel (DESIGN.md S6.3) as a registry
+    engine; interpret-mode on CPU.
+
+    Philox is keyed on the global word index, so this engine is
+    bit-for-bit identical to ``multispin`` -- the kernel's pure-jnp
+    oracle -- at any block size, and through the resident tier (S9).
+    """
+
+    name = "multispin_pallas"
+    resident_family = "multispin"
+
+    def __init__(self, config):
+        super().__init__(config)
+        self.block_rows = _even_block_rows(config.n)
+        self.interpret = jax.default_backend() != "tpu"
+
+    def color_update(self, target, op, inv_temp, is_black, seed, offset,
+                     ctx=None):
+        from repro.kernels.multispin.multispin import multispin_update
+        return multispin_update(target, op, inv_temp, is_black=is_black,
+                                seed=seed, offset=offset,
+                                block_rows=self.block_rows,
+                                interpret=self.interpret, thresholds=ctx)
+
+    def resident_sweeps(self, state, inv_temp, seed, start_offset,
+                        n_sweeps):
+        from repro.kernels.multispin.resident import \
+            multispin_sweeps_resident
+        return multispin_sweeps_resident(*state, inv_temp,
+                                         n_sweeps=n_sweeps, seed=seed,
+                                         start_offset=start_offset,
+                                         interpret=self.interpret)
 
 
 # ---------------------------------------------------------------------------
@@ -411,6 +494,7 @@ class BitplanePallasEngine(BitplaneEngine):
     """
 
     name = "bitplane_pallas"
+    resident_family = "bitplane"
 
     def __init__(self, config):
         super().__init__(config)
@@ -424,6 +508,15 @@ class BitplanePallasEngine(BitplaneEngine):
                                seed=seed, offset=offset,
                                block_rows=self.block_rows,
                                interpret=self.interpret, thresholds=ctx)
+
+    def resident_sweeps(self, state, inv_temp, seed, start_offset,
+                        n_sweeps):
+        from repro.kernels.bitplane.resident import \
+            bitplane_sweeps_resident
+        return bitplane_sweeps_resident(*state, inv_temp,
+                                        n_sweeps=n_sweeps, seed=seed,
+                                        start_offset=start_offset,
+                                        interpret=self.interpret)
 
 
 # ---------------------------------------------------------------------------

@@ -114,9 +114,8 @@ def make_ising3d_step(mesh, *, n: int, seed: int = 0, n_sweeps: int = 1,
                        out_specs=spec, check_vma=False)
     def sweeps(full, inv_temp, sweep0):
         def body(i, f):
-            off = sweep0 + 2 * jnp.uint32(i)
-            f = update(f, inv_temp, 0, off)
-            f = update(f, inv_temp, 1, off + 1)
+            f = update(f, inv_temp, 0, crng.half_sweep_offset(sweep0, i, 0))
+            f = update(f, inv_temp, 1, crng.half_sweep_offset(sweep0, i, 1))
             return f
         return jax.lax.fori_loop(0, n_sweeps, body, full)
 

@@ -23,11 +23,17 @@ from . import rng as crng
 
 
 def neighbor_sums(op_plane: jax.Array, is_black: bool) -> jax.Array:
-    """4-neighbor spin sums for every target cell (int32)."""
-    op = op_plane.astype(jnp.int32)
+    """4-neighbor spin sums for every target cell.
+
+    Stays in int8 (H1.5): |sum| <= 4, so the narrow type is exact and
+    the working set never widens 4x to int32; callers convert to
+    float32 at the accept, where the int32 path converted anyway, so
+    flip decisions are bit-identical (tests/test_resident.py).
+    """
+    op = op_plane.astype(jnp.int8)
     up = jnp.roll(op, 1, axis=0)
     down = jnp.roll(op, -1, axis=0)
-    side = lat.side_shift(op, is_black).astype(jnp.int32)
+    side = lat.side_shift(op, is_black)
     return up + down + op + side
 
 
@@ -40,7 +46,7 @@ def update_color(target, op_plane, uniforms, inv_temp, is_black: bool,
     satisfy detailed balance on the checkerboard decomposition.
     """
     nn = neighbor_sums(op_plane, is_black)
-    t = target.astype(jnp.int32)
+    t = target  # +-1 in the plane dtype; int8 negate is exact (H1.5)
     arg = -2.0 * inv_temp * nn.astype(jnp.float32) * t.astype(jnp.float32)
     if rule == "heatbath":
         acceptance = jax.nn.sigmoid(arg)   # e^arg / (1 + e^arg)
@@ -91,9 +97,10 @@ def run_sweeps_philox(black, white, inv_temp, n_sweeps: int, seed: int = 0,
 
     def body(i, carry):
         b, w = carry
-        off = start_offset + 2 * jnp.uint32(i)
-        b = update_color_philox(b, w, inv_temp, True, seed, off)
-        w = update_color_philox(w, b, inv_temp, False, seed, off + 1)
+        b = update_color_philox(b, w, inv_temp, True, seed,
+                                crng.half_sweep_offset(start_offset, i, 0))
+        w = update_color_philox(w, b, inv_temp, False, seed,
+                                crng.half_sweep_offset(start_offset, i, 1))
         return (b, w)
 
     return jax.lax.fori_loop(0, n_sweeps, body, (black, white))

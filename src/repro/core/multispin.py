@@ -116,9 +116,11 @@ def run_sweeps_packed(black_words, white_words, inv_temp, n_sweeps: int,
 
     def body(i, carry):
         b, w = carry
-        off = start_offset + 2 * jnp.uint32(i)
-        b = update_color_packed(b, w, inv_temp, True, seed, off, thresholds)
-        w = update_color_packed(w, b, inv_temp, False, seed, off + 1,
+        b = update_color_packed(b, w, inv_temp, True, seed,
+                                crng.half_sweep_offset(start_offset, i, 0),
+                                thresholds)
+        w = update_color_packed(w, b, inv_temp, False, seed,
+                                crng.half_sweep_offset(start_offset, i, 1),
                                 thresholds)
         return (b, w)
 

@@ -27,6 +27,28 @@ PHILOX_W1 = np.uint32(0xBB67AE85)
 
 _LO16 = np.uint32(0xFFFF)
 
+#: half-sweeps per full lattice sweep -- the unit of the Philox offset
+#: counter.  Every sweep loop in the repo (host-side fori_loops, the
+#: per-half-sweep Pallas wrappers, AND the in-kernel loops of the
+#: resident-sweep tier, DESIGN.md S9) advances its offset with
+#: :func:`half_sweep_offset`, so the counter layout cannot fork between
+#: host-side and in-kernel advancement.
+HALF_SWEEPS_PER_SWEEP = 2
+
+
+def half_sweep_offset(start_offset, sweep, color):
+    """Philox offset of half-sweep ``color`` (0 = black, 1 = white) of
+    full sweep ``sweep`` past a cumulative ``start_offset``.
+
+    ``start_offset`` itself is in half-sweep units (= 2 x sweeps already
+    run, cuRAND's ``offset``); all args may be python ints or traced
+    uint32 scalars.  uint32 wrap-around is the cuRAND behavior, kept.
+    """
+    return (jnp.asarray(start_offset, jnp.uint32)
+            + np.uint32(HALF_SWEEPS_PER_SWEEP) * jnp.asarray(sweep,
+                                                             jnp.uint32)
+            + jnp.asarray(color, jnp.uint32))
+
 
 def _mulhilo32(a, b):
     """32x32 -> (hi, lo) uint32 multiply via 16-bit limbs (no uint64)."""

@@ -6,6 +6,8 @@ import functools
 import jax
 import jax.numpy as jnp
 
+from repro.core import rng as crng
+
 from .bitplane import bitplane_update
 
 
@@ -22,12 +24,15 @@ def run_sweeps_bitplane_kernel(black_words, white_words, inv_temp,
 
     def body(i, carry):
         b, w = carry
-        off = start_offset + 2 * jnp.uint32(i)
         b = bitplane_update(b, w, inv_temp, is_black=True, seed=seed,
-                            offset=off, block_rows=block_rows,
+                            offset=crng.half_sweep_offset(start_offset,
+                                                          i, 0),
+                            block_rows=block_rows,
                             interpret=interpret, thresholds=thresholds)
         w = bitplane_update(w, b, inv_temp, is_black=False, seed=seed,
-                            offset=off + 1, block_rows=block_rows,
+                            offset=crng.half_sweep_offset(start_offset,
+                                                          i, 1),
+                            block_rows=block_rows,
                             interpret=interpret, thresholds=thresholds)
         return (b, w)
 

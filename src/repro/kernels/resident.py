@@ -1,0 +1,119 @@
+"""VMEM-budget planner for the resident-sweep kernel tier (DESIGN.md S9).
+
+The per-half-sweep kernels (``kernels/{stencil,multispin,bitplane}``)
+re-read and re-write both compact color planes through HBM twice per
+sweep, so a ``measure_every``-sized block of ``k`` sweeps costs ``2k``
+HBM round-trips of the whole working set.  When both planes FIT in
+per-core VMEM, the resident kernels (``resident.py`` in each family
+directory) instead stage the planes into VMEM once, run all ``k`` sweeps
+in an in-kernel ``lax.fori_loop`` (Philox offsets advanced in-kernel per
+(sweep, color) -- ``core.rng.half_sweep_offset``), and write the planes
+back once: HBM traffic drops from O(k) plane round-trips to O(1).
+
+This module is the single place that decides *whether* the planes fit.
+``plan_resident(family, n, m)`` returns a :class:`ResidentPlan` when the
+modeled VMEM working set is within :data:`VMEM_BUDGET_BYTES`, else
+``None`` -- the engines (``core/engine.py``) compute the plan once at
+construction and route ``sweep_fn`` through the resident kernel or fall
+back to the per-half-sweep tier accordingly, so ``Simulation``,
+``Ensemble`` and ``measure_scan`` pick the tier up with no caller
+changes.
+
+Working-set model (conservative, documented per family): the resident
+state is both color planes plus the loop-carry copy XLA may keep live
+across the ``fori_loop`` back-edge (4 plane-equivalents), plus the
+per-half-sweep temporaries that peak simultaneously (neighbor taps,
+counts/sums, draws, accept masks).  The multipliers below count those
+temporaries in units of one color plane of the family's native dtype:
+
+* ``stencil``   -- int8 planes; temps: 4 int8 taps/sums + draw and
+  acceptance float32 planes (8 int8-plane-equivalents) -> 16x.
+* ``multispin`` -- uint32 word planes; temps: taps + nn_words (4x) +
+  the EIGHT per-nibble uint32 draw planes + flip/select chain (~2x)
+  -> 18x.
+* ``bitplane``  -- uint32 bit planes; temps: 3 taps + 3 count bitplanes
+  + 1 shared draw plane + flip (8x) -> 12x.
+
+The model is deliberately pessimistic: a plan that fits the model fits
+the hardware with headroom for Mosaic's own allocation; lattices near
+the boundary fall back to the (always-correct) per-half-sweep tier.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Dict, Optional
+
+#: modeled per-core VMEM budget for the resident working set.  Cores have
+#: ~16 MiB of VMEM (pallas_guide.md); half is left to the compiler for
+#: spills, the SMEM-adjacent scalars, and double-buffered plane I/O.
+VMEM_BUDGET_BYTES: int = 8 * 1024 * 1024
+
+#: family -> (bytes per site of ONE compact color plane, working-set
+#: multiplier in plane units).  Plane geometry is (n, m/2) sites for
+#: stencil (int8) and bitplane (uint32 word per site); multispin packs 8
+#: sites per uint32 word, so its plane is (n, m/16) words.
+_FAMILIES: Dict[str, tuple] = {
+    "stencil": (1.0, 16),     # int8 site planes
+    "multispin": (0.5, 18),   # 4 bits/site in uint32 words
+    "bitplane": (4.0, 12),    # uint32 word per site (32 replicas deep)
+}
+
+
+@dataclasses.dataclass(frozen=True)
+class ResidentPlan:
+    """A positive fit decision: this (family, lattice) runs resident."""
+
+    family: str
+    n: int
+    m: int
+    plane_bytes: int
+    working_set_bytes: int
+    budget_bytes: int
+
+
+def plane_bytes(family: str, n: int, m: int) -> int:
+    """Bytes of ONE compact color plane in the family's native packing."""
+    per_site, _ = _FAMILIES[family]
+    return int(n * (m // 2) * per_site)
+
+
+def working_set_bytes(family: str, n: int, m: int) -> int:
+    """Modeled peak VMEM bytes of the resident kernel (module docstring)."""
+    _, mult = _FAMILIES[family]
+    return plane_bytes(family, n, m) * mult
+
+
+def plan_resident(family: str, n: int, m: int,
+                  budget_bytes: Optional[int] = None
+                  ) -> Optional[ResidentPlan]:
+    """Fit decision for one (engine family, lattice) pair.
+
+    Returns a :class:`ResidentPlan` when the modeled working set fits
+    ``budget_bytes`` (default :data:`VMEM_BUDGET_BYTES`, read at call
+    time so tests can move the fallback boundary), else ``None``.
+    """
+    if family not in _FAMILIES:
+        raise ValueError(f"unknown resident family {family!r}; "
+                         f"known: {sorted(_FAMILIES)}")
+    budget = VMEM_BUDGET_BYTES if budget_bytes is None else budget_bytes
+    ws = working_set_bytes(family, n, m)
+    if ws > budget:
+        return None
+    return ResidentPlan(family=family, n=n, m=m,
+                        plane_bytes=plane_bytes(family, n, m),
+                        working_set_bytes=ws, budget_bytes=budget)
+
+
+def max_square_lattice(family: str,
+                       budget_bytes: Optional[int] = None) -> int:
+    """Largest even square side n with working_set(n, n) <= budget --
+    the fallback boundary, for docs/tests (DESIGN.md S9 table)."""
+    budget = VMEM_BUDGET_BYTES if budget_bytes is None else budget_bytes
+    per_site, mult = _FAMILIES[family]
+    # working_set(n, n) = n * (n/2) * per_site * mult
+    n = int(math.isqrt(int(2 * budget / (per_site * mult))))
+    n -= n % 2
+    while n > 0 and working_set_bytes(family, n, n) > budget:
+        n -= 2
+    return n

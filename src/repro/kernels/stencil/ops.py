@@ -6,6 +6,8 @@ import functools
 import jax
 import jax.numpy as jnp
 
+from repro.core import rng as crng
+
 from .stencil import stencil_update
 
 
@@ -23,13 +25,12 @@ def run_sweeps_stencil(black, white, inv_temp, n_sweeps: int, seed: int = 0,
 
     def body(i, carry):
         b, w = carry
-        off = start_offset + 2 * jnp.uint32(i)
         b = stencil_update(b, w, inv_temp, is_black=True, seed=seed,
-                           offset=off, block_rows=block_rows,
-                           interpret=interpret)
+                           offset=crng.half_sweep_offset(start_offset, i, 0),
+                           block_rows=block_rows, interpret=interpret)
         w = stencil_update(w, b, inv_temp, is_black=False, seed=seed,
-                           offset=off + 1, block_rows=block_rows,
-                           interpret=interpret)
+                           offset=crng.half_sweep_offset(start_offset, i, 1),
+                           block_rows=block_rows, interpret=interpret)
         return (b, w)
 
     return jax.lax.fori_loop(0, n_sweeps, body, (black, white))

@@ -27,8 +27,10 @@ DEFAULT_BLOCK_ROWS = 256
 
 
 def _side(op, rows_parity, is_black):
-    plus = jnp.roll(op, -1, axis=1)
-    minus = jnp.roll(op, 1, axis=1)
+    # column wrap as slice-concat (pad+slice form, H1.4): fusible
+    # producers instead of jnp.roll's gather lowering
+    plus = jnp.concatenate([op[:, 1:], op[:, :1]], axis=1)
+    minus = jnp.concatenate([op[:, -1:], op[:, :-1]], axis=1)
     if is_black:
         return jnp.where(rows_parity == 1, plus, minus)
     return jnp.where(rows_parity == 1, minus, plus)
@@ -38,16 +40,19 @@ def _kernel(beta_ref, seeds_ref, target_ref, op_m1_ref, op_0_ref, op_p1_ref,
             out_ref, *, is_black: bool, block_rows: int, use_philox: bool,
             uniforms_ref=None):
     inv_temp = beta_ref[0]
-    op = op_0_ref[...].astype(jnp.int32)
-    up_row = op_m1_ref[...][-1:, :].astype(jnp.int32)
-    down_row = op_p1_ref[...][:1, :].astype(jnp.int32)
+    # neighbor sums stay in the plane dtype (int8: |sum| <= 4, H1.5) --
+    # no int32 widening of the working set; the accept converts to
+    # float32 exactly where the int32 path did, so flips are bit-identical
+    op = op_0_ref[...]
+    up_row = op_m1_ref[...][-1:, :]
+    down_row = op_p1_ref[...][:1, :]
     up = jnp.concatenate([up_row, op[:-1, :]], axis=0)
     down = jnp.concatenate([op[1:, :], down_row], axis=0)
     parity = (jax.lax.broadcasted_iota(jnp.int32, op.shape, 0)
               % 2)  # block height is even => local parity == global parity
     nn = up + down + op + _side(op, parity, is_black)
 
-    t = target_ref[...].astype(jnp.int32)
+    t = target_ref[...]
     if use_philox:
         k0 = seeds_ref[0]
         k1 = seeds_ref[1]

@@ -6,6 +6,8 @@ import functools
 import jax
 import jax.numpy as jnp
 
+from repro.core import rng as crng
+
 from .tensorcore import tensorcore_update
 
 
@@ -18,12 +20,14 @@ def run_sweeps_tensorcore(planes, inv_temp, n_sweeps: int, seed: int = 0,
     start_offset = jnp.uint32(start_offset)
 
     def body(i, p):
-        off = start_offset + 2 * jnp.uint32(i)
-        p = tensorcore_update(p, "black", inv_temp, seed=seed, offset=off,
+        p = tensorcore_update(p, "black", inv_temp, seed=seed,
+                              offset=crng.half_sweep_offset(start_offset,
+                                                            i, 0),
                               block=block, interpret=interpret)
         p = tensorcore_update(p, "white", inv_temp, seed=seed,
-                              offset=off + 1, block=block,
-                              interpret=interpret)
+                              offset=crng.half_sweep_offset(start_offset,
+                                                            i, 1),
+                              block=block, interpret=interpret)
         return p
 
     return jax.lax.fori_loop(0, n_sweeps, body, planes)

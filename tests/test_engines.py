@@ -189,6 +189,31 @@ def test_counter_engines_match_legacy_wrappers():
     np.testing.assert_array_equal(np.asarray(we), np.asarray(wb_ref))
 
 
+@pytest.mark.parametrize("engine", ALL_ENGINES)
+def test_donated_sweep_rebinding(engine):
+    """H1.8: the jitted ``sweeps`` paths donate their state buffers, so
+    the public contract is rebinding (``state = engine.sweeps(state,
+    ...)``).  Two consecutive rebinding calls must hit no stale-buffer
+    error (the second call reuses the cached executable with a fresh
+    donated buffer) and must equal the same chunking through the pure,
+    non-donating ``scan_step`` evaluated eagerly."""
+    cfg = SimConfig(n=16, m=16, temperature=2.1, seed=6, engine=engine,
+                    tc_block=4)
+    eng = make_engine(cfg)
+    state = eng.init_state(jax.random.PRNGKey(cfg.seed))
+    state = eng.sweeps(state, 2, 0)
+    state = eng.sweeps(state, 2, 2)  # cached executable, donated again
+
+    ref_eng = make_engine(cfg)
+    ref_state = ref_eng.init_state(jax.random.PRNGKey(cfg.seed))
+    beta = jnp.float32(cfg.inv_temp)
+    ref_state = ref_eng.scan_step(ref_state, beta, cfg.seed, 0, 2)
+    ref_state = ref_eng.scan_step(ref_state, beta, cfg.seed, 2, 2)
+    np.testing.assert_array_equal(
+        np.asarray(eng.full_lattice(state)),
+        np.asarray(ref_eng.full_lattice(ref_state)))
+
+
 def test_restore_rejects_pre_registry_checkpoint(tmp_path):
     path = str(tmp_path / "legacy.npz")
     np.savez(path, step_count=10, engine="multispin", n=16, m=16,
