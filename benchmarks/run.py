@@ -325,6 +325,42 @@ def table1_resident(n=64, k=8):
 
 
 # ---------------------------------------------------------------------------
+# spec-driven bench: time any serialized RunSpec and record the spec in
+# the row, so every perf number is replayable (python -m repro run)
+# ---------------------------------------------------------------------------
+
+def spec_bench(path, sweeps=10):
+    """Benchmark the run a ``RunSpec`` JSON file describes.
+
+    With a sweep plan: times one fused ``Session.measure`` dispatch
+    (after a compile warmup).  Without: times ``sweeps``-sweep
+    ``Session.run`` blocks.  The serialized spec lands in the row of
+    the BENCH_*.json record (EXPERIMENTS.md S Bench).
+    """
+    from repro.api import RunSpec, Session
+    with open(path) as f:
+        spec = RunSpec.from_json(f.read())
+    n, m = spec.lattice.n, spec.lattice.m
+    batch = 1 if spec.batch is None else spec.batch.size
+    from repro.core.engine import ENGINES
+    reps = ENGINES[spec.engine.name].replicas
+    session = Session.open(spec)
+    if spec.sweep is not None:
+        total = spec.sweep.total_sweeps
+        dt, _ = _timeit(lambda: session.measure(), iters=2)
+        kind, flips = "measure", reps * batch * n * m * total
+    else:
+        dt, _ = _timeit(lambda: session.run(sweeps), iters=2)
+        kind, flips = "run", reps * batch * n * m * sweeps
+    name = f"spec_{kind}_{spec.engine.name}_{spec.mode}_{n}x{m}"
+    if _RECORDER is None:
+        print(f"{name},{dt * 1e6:.1f},flips_per_ns={flips/dt/1e9:.4f}")
+        return
+    _RECORDER.record(name, dt * 1e6, spec=spec.to_json(),
+                     flips_per_ns=flips / dt / 1e9, batch=batch)
+
+
+# ---------------------------------------------------------------------------
 # Fig 5/6: physics validation vs Onsager
 # ---------------------------------------------------------------------------
 
@@ -401,6 +437,10 @@ def main() -> None:
                     metavar="DIR_OR_PATH",
                     help="also write a BENCH_<stamp>.json perf record "
                          "(diff two with benchmarks/report.py diff A B)")
+    ap.add_argument("--spec", default=None, metavar="SPEC_JSON",
+                    help="benchmark the run this RunSpec file describes "
+                         "(recorded with the serialized spec; runs "
+                         "alone unless --only also selects benches)")
     args, _ = ap.parse_known_args()
     _ENGINE_FILTER = tuple(e for e in args.engines.split(",") if e)
     from repro.core.engine import ENGINES
@@ -414,7 +454,7 @@ def main() -> None:
     _RECORDER = RunRecorder(echo=True, meta={
         "stamp": stamp, "backend": jax.default_backend(),
         "device_count": jax.device_count(), "only": args.only,
-        "engines": args.engines})
+        "engines": args.engines, "spec_file": args.spec})
 
     benches = [table1_single_device, table1_measure_fusion,
                table1_bitplane, table1_resident, table2_multispin_sizes,
@@ -424,11 +464,15 @@ def main() -> None:
     only = [tok for tok in args.only.split(",") if tok]
     selected = [b for b in benches
                 if not only or any(tok in b.__name__ for tok in only)]
-    if not selected:
+    if args.spec and not only:
+        selected = []          # --spec alone: just the spec bench
+    elif not selected:
         ap.error(f"--only {args.only!r} matches no bench; benches: "
                  f"{[b.__name__ for b in benches]}")
     for b in selected:
         b()
+    if args.spec:
+        spec_bench(args.spec)
 
     if args.json is not None:
         path = _RECORDER.write_json(args.json)

@@ -1,6 +1,6 @@
 """32 replicas from ONE simulation: the bitplane engine (DESIGN.md S8).
 
-One `bitplane` Simulation advances 32 independent replica lattices packed
+One `bitplane` session advances 32 independent replica lattices packed
 1 bit/spin into each uint32 word, drawing ONE shared Philox uint32 per
 site (1/32 of the nibble engine's randomness per replica-spin).  The
 measured trajectory is `(n_measure, 32)`: 32 per-replica magnetization
@@ -24,8 +24,8 @@ Run:  PYTHONPATH=src python examples/bitplane_replicas.py
 """
 import numpy as np
 
-from repro.analysis import MeasurementPlan, jackknife, tau_int
-from repro.core.sim import SimConfig, Simulation
+from repro.analysis import jackknife, tau_int
+from repro.api import EngineSpec, LatticeSpec, RunSpec, Session, SweepSpec
 
 L = 48
 
@@ -36,12 +36,18 @@ def distinct_replicas(sim):
                 for r in range(sim.engine.replicas)})
 
 
+def bitplane_spec(temp, sweep=None):
+    return RunSpec(lattice=LatticeSpec(n=L, m=L),
+                   engine=EngineSpec("bitplane"),
+                   temperature=temp, seed=11, sweep=sweep)
+
+
 # -- disordered side: 32 live chains, replica averaging works ---------------
 TEMP = 2.5
-sim = Simulation(SimConfig(n=L, m=L, temperature=TEMP, seed=11,
-                           engine="bitplane"))
-traj = sim.measure(MeasurementPlan(n_measure=120, sweeps_between=2,
-                                   thermalize=300))
+sim = Session.open(bitplane_spec(TEMP, SweepSpec(thermalize=300,
+                                                 measure_every=2,
+                                                 n_measure=120)))
+traj = sim.measure()
 m = np.abs(traj["m"])                        # (120, 32) per-replica series
 print(f"T={TEMP} (> Tc): trajectory {traj['m'].shape}, "
       f"{distinct_replicas(sim)}/32 distinct replica configs")
@@ -59,8 +65,7 @@ assert err < err_single                      # shared draws still help
 
 # -- ordered side: shared randoms coalesce the chains -----------------------
 TEMP = 2.0
-sim = Simulation(SimConfig(n=L, m=L, temperature=TEMP, seed=11,
-                           engine="bitplane"))
+sim = Session.open(bitplane_spec(TEMP))
 sim.run(400)
 k = distinct_replicas(sim)
 print(f"T={TEMP} (< Tc): {k}/32 distinct replica configs after 400 sweeps "

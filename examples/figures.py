@@ -5,17 +5,19 @@ susceptibility chi, specific heat C_v, and tau_int per temperature.
 Fig. 6: Binder cumulant U_L(T) per lattice size and the U_L-crossing
 estimate of T_c (exact: 2/ln(1+sqrt(2)) = 2.269185).
 
-Every lattice size runs its whole temperature scan as ONE Ensemble whose
-measured trajectory is ONE fused ``measure_scan`` dispatch (observables
-inside the compiled scan -- repro.analysis, DESIGN.md S7).  Results are
-serialized by ``RunRecorder`` to the EXPERIMENTS.md CSV schema.
+Every lattice size runs its whole temperature scan as ONE ensemble-mode
+``RunSpec`` whose measured trajectory is ONE fused ``measure_scan``
+dispatch (observables inside the compiled scan -- repro.analysis,
+DESIGN.md S7; dispatch via repro.api.Session, S10).  Results are
+serialized by ``RunRecorder`` to the EXPERIMENTS.md CSV schema with the
+serialized per-size specs in the metadata, so every figure is
+replayable from its record.
 
 Run:    PYTHONPATH=src python examples/figures.py [--smoke] [--out DIR]
 Smoke:  small lattices / short runs; asserts the Binder-crossing T_c
         lands within 2% of the exact value (the CI physics gate).
 """
 import argparse
-import dataclasses
 import os
 import sys
 import time
@@ -24,23 +26,35 @@ import numpy as np
 
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 
-from repro.analysis import (MeasurementPlan, RunRecorder, binder,
-                            binder_crossing, jackknife, specific_heat,
-                            susceptibility, tau_int)
+from repro.analysis import (RunRecorder, binder, binder_crossing,
+                            jackknife, specific_heat, susceptibility,
+                            tau_int)
+from repro.api import (BatchSpec, EngineSpec, LatticeSpec, RunSpec,
+                       Session, SweepSpec)
 from repro.core import observables as obs
-from repro.core.ensemble import Ensemble
 
 TEMPS = [1.5, 1.8, 2.0, 2.1, 2.15, 2.2, 2.25, 2.3, 2.35, 2.4, 2.5, 2.7,
          3.0]
 
 
-def scan_size(L, temps, plan, engine, seed0, recorder):
-    """One lattice size: Ensemble over temps, fused measurement, rows."""
-    ens = Ensemble(n=L, m=L, temperatures=temps,
-                   seeds=[seed0 + i for i in range(len(temps))],
-                   engine=engine, init_p_up=1.0)
+def size_spec(L, temps, sweep, engine, seed0) -> RunSpec:
+    """The ensemble-mode spec of one lattice size's temperature scan."""
+    return RunSpec(
+        lattice=LatticeSpec(n=L, m=L, init_p_up=1.0),
+        engine=EngineSpec(engine),
+        batch=BatchSpec(temperatures=tuple(temps),
+                        seeds=tuple(seed0 + i
+                                    for i in range(len(temps)))),
+        sweep=sweep)
+
+
+def scan_size(spec, recorder):
+    """One lattice size: batched Session, fused measurement, rows."""
+    L = spec.lattice.n
+    temps = spec.batch.temperatures
+    session = Session.open(spec)
     t0 = time.perf_counter()
-    traj = ens.measure(plan)                 # {"m","e"}: (n_measure, B)
+    traj = session.measure()                 # {"m","e"}: (n_measure, B)
     us = (time.perf_counter() - t0) * 1e6 / len(temps)
     n_spins = L * L
     binders = []
@@ -72,21 +86,23 @@ def main(argv=None):
 
     if args.smoke:
         sizes = args.sizes or [16, 32]
-        plan = MeasurementPlan(n_measure=400, sweeps_between=2,
-                               thermalize=400)
+        sweep = SweepSpec(thermalize=400, measure_every=2,
+                          n_measure=400)
     else:
         sizes = args.sizes or [32, 64]
-        plan = MeasurementPlan(n_measure=2000, sweeps_between=4,
-                               thermalize=1500)
+        sweep = SweepSpec(thermalize=1500, measure_every=4,
+                          n_measure=2000)
 
+    specs = {L: size_spec(L, TEMPS, sweep, args.engine,
+                          seed0=101 + 1000 * k)
+             for k, L in enumerate(sizes)}
+    # the recorder metadata IS the serialized specs: the whole figure
+    # reproduces from this record alone (DESIGN.md S10)
     rec = RunRecorder(echo=True, meta={
-        "figure": "fig5+fig6", "engine": args.engine, "sizes": sizes,
-        "temps": TEMPS, "plan": dataclasses.asdict(plan)})
+        "figure": "fig5+fig6",
+        "specs": {str(L): s.to_dict() for L, s in specs.items()}})
 
-    u_by_size = {}
-    for k, L in enumerate(sizes):
-        u_by_size[L] = scan_size(L, TEMPS, plan, args.engine,
-                                 seed0=101 + 1000 * k, recorder=rec)
+    u_by_size = {L: scan_size(specs[L], recorder=rec) for L in sizes}
 
     tc = binder_crossing(TEMPS, u_by_size[min(sizes)],
                          u_by_size[max(sizes)])

@@ -1,18 +1,20 @@
 """Reproduce the paper's validation figures (Fig. 5 magnetization curve,
-Fig. 6 Binder cumulant) on small lattices -- batched.
+Fig. 6 Binder cumulant) on small lattices -- batched, from one spec.
 
-The whole temperature scan per lattice size is ONE Ensemble: every
-(temperature, seed) member advances inside a single vmapped, jit-compiled
-sweep (repro.core.ensemble, DESIGN.md S3), instead of one Simulation +
-one compilation per temperature.
+The whole temperature scan per lattice size is ONE ensemble-mode
+``RunSpec``: every (temperature, seed) member advances inside a single
+vmapped, jit-compiled sweep (repro.api.Session dispatching the batched
+runner, DESIGN.md S3/S10), instead of one Simulation + one compilation
+per temperature.
 
 Run:  PYTHONPATH=src python examples/phase_transition.py
 """
 import numpy as np
 import jax.numpy as jnp
 
+from repro.api import (BatchSpec, EngineSpec, LatticeSpec, RunSpec,
+                       Session, SweepSpec)
 from repro.core import observables as obs
-from repro.core.ensemble import Ensemble
 
 temps = [1.5, 1.8, 2.0, 2.1, 2.2, 2.27, 2.35, 2.5, 3.0]
 sizes = [32, 48]
@@ -21,11 +23,15 @@ results = {}
 for L in sizes:
     # ordered start below Tc: avoids the striped metastable states the
     # paper reports in S5.3 for cold random starts
-    ens = Ensemble(n=L, m=L, temperatures=temps,
-                   seeds=[11 + i for i in range(len(temps))],
-                   engine="multispin", init_p_up=1.0)
-    samples = ens.trajectory(n_measure=40, sweeps_between=5,
-                             thermalize=400)        # (40, len(temps))
+    spec = RunSpec(
+        lattice=LatticeSpec(n=L, m=L, init_p_up=1.0),
+        engine=EngineSpec("multispin"),
+        batch=BatchSpec(temperatures=tuple(temps),
+                        seeds=tuple(11 + i for i in range(len(temps)))),
+        sweep=SweepSpec(thermalize=400, measure_every=5, n_measure=40,
+                        fields=("m",)))
+    session = Session.open(spec)
+    samples = session.measure()["m"]             # (40, len(temps))
     m = np.abs(samples).mean(axis=0)
     u = [float(obs.binder_cumulant(jnp.asarray(samples[:, i])))
          for i in range(len(temps))]

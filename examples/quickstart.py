@@ -1,14 +1,13 @@
-"""Quickstart: simulate a 2D Ising lattice with every engine, validate
-against Onsager's exact solution, and show the Pallas kernel path.
+"""Quickstart: one typed `RunSpec` + `Session` drives every engine
+(DESIGN.md S10), validated against Onsager's exact solution, plus the
+raw Pallas kernel path.
 
 Run:  PYTHONPATH=src python examples/quickstart.py
 """
-import jax
 import jax.numpy as jnp
-import numpy as np
 
+from repro.api import EngineSpec, LatticeSpec, RunSpec, Session
 from repro.core import lattice as lat, multispin as ms, observables as obs
-from repro.core.sim import SimConfig, Simulation
 from repro.kernels.multispin.ops import run_sweeps_multispin
 
 T = 1.8  # below Tc = 2.269: the lattice must order
@@ -16,10 +15,19 @@ T = 1.8  # below Tc = 2.269: the lattice must order
 print(f"== engines at T={T} (Onsager |m| = "
       f"{float(obs.onsager_magnetization(T)):.4f}) ==")
 for engine in ("basic", "basic_philox", "multispin", "tensorcore"):
-    sim = Simulation(SimConfig(n=64, m=64, temperature=T, seed=3,
-                               engine=engine, tc_block=8))
-    sim.run(300)
-    print(f"  {engine:14s} |m| = {abs(sim.magnetization()):.4f}")
+    params = {"tc_block": 8} if engine == "tensorcore" else {}
+    spec = RunSpec(lattice=LatticeSpec(n=64, m=64),
+                   engine=EngineSpec(engine, params=params),
+                   temperature=T, seed=3)
+    session = Session.open(spec)
+    session.run(300)
+    print(f"  {engine:14s} |m| = {abs(session.magnetization()):.4f}")
+
+# the spec is one serializable blob: the same JSON drives
+# `python -m repro run` and rides inside every checkpoint
+print("== spec round trip ==")
+print(f"  {spec.to_json()[:72]}...")
+assert RunSpec.from_json(spec.to_json()) == spec
 
 print("== Pallas multispin kernel (interpret=True on CPU) ==")
 # start from the ground state: cold random starts can fall into the

@@ -49,9 +49,15 @@ class RunRecorder:
             print(HEADER)
 
     def record(self, name: str, us_per_call: float = 0.0,
-               **derived) -> dict:
+               spec: Optional[str] = None, **derived) -> dict:
+        """One row; ``spec`` (a serialized ``repro.api.RunSpec`` JSON
+        string) rides along in the JSON record -- not the CSV -- so a
+        perf row is replayable with ``python -m repro run`` from the
+        record alone."""
         row = {"name": name, "us_per_call": float(us_per_call),
                "derived": {k: v for k, v in derived.items()}}
+        if spec is not None:
+            row["spec"] = spec
         self.rows.append(row)
         if self.echo:
             print(self.format_row(row))

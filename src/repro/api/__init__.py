@@ -1,0 +1,20 @@
+"""repro.api: the typed, serializable front door (DESIGN.md S10).
+
+One frozen ``RunSpec`` tree describes any run -- single simulation,
+vmapped ensemble, or sharded distributed step -- and one ``Session``
+façade executes it.  The same serialized spec is the checkpoint
+metadata, the ``RunRecorder`` meta, and the ``python -m repro run``
+launch config.
+
+This is the Ising-study API surface; the unrelated seed-era LLM stack
+(``repro.configs``, ``repro.models``, ``repro.train``, ``repro.launch``
+serve/train) is documented separately in README.md.
+"""
+from .session import Session, describe
+from .spec import (BatchSpec, EngineSpec, LatticeSpec, MeshSpec, RunSpec,
+                   SweepSpec)
+
+__all__ = [
+    "RunSpec", "LatticeSpec", "EngineSpec", "SweepSpec", "BatchSpec",
+    "MeshSpec", "Session", "describe",
+]

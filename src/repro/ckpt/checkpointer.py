@@ -51,16 +51,22 @@ class Checkpointer:
         self._worker: Optional[threading.Thread] = None
 
     # -- write --------------------------------------------------------------
-    def save(self, step: int, tree) -> str:
+    def save(self, step: int, tree, spec_json: Optional[str] = None) -> str:
+        """``spec_json`` (a serialized ``repro.api.RunSpec``) is written
+        as a ``spec.json`` sidecar inside the step dir, committed by the
+        same DONE marker -- the unified run-provenance blob
+        (DESIGN.md S10); read it back with :meth:`read_spec`."""
         host = _flatten(tree)
-        return self._write(step, host)
+        return self._write(step, host, spec_json)
 
-    def save_async(self, step: int, tree) -> None:
+    def save_async(self, step: int, tree,
+                   spec_json: Optional[str] = None) -> None:
         """Snapshot to host now; write on a background thread."""
         host = _flatten(tree)  # device->host copy happens here
         self._join()
         self._worker = threading.Thread(target=self._write,
-                                        args=(step, host), daemon=True)
+                                        args=(step, host, spec_json),
+                                        daemon=True)
         self._worker.start()
 
     def wait(self) -> None:
@@ -71,13 +77,17 @@ class Checkpointer:
             self._worker.join()
             self._worker = None
 
-    def _write(self, step: int, host: dict) -> str:
+    def _write(self, step: int, host: dict,
+               spec_json: Optional[str] = None) -> str:
         path = os.path.join(self.dir, f"step_{step:010d}")
         tmp = path + ".tmp"
         if os.path.exists(tmp):
             shutil.rmtree(tmp)
         os.makedirs(tmp)
         np.savez(os.path.join(tmp, "arrays.npz"), **host)
+        if spec_json is not None:
+            with open(os.path.join(tmp, "spec.json"), "w") as f:
+                f.write(spec_json)
         with open(os.path.join(tmp, "DONE"), "w") as f:
             f.write(str(step))
         if os.path.exists(path):
@@ -104,6 +114,18 @@ class Checkpointer:
     def latest_step(self) -> Optional[int]:
         steps = self.all_steps()
         return steps[-1] if steps else None
+
+    def read_spec(self, step: Optional[int] = None) -> Optional[str]:
+        """The ``spec.json`` sidecar of ``step`` (default: latest), or
+        ``None`` when the checkpoint was written without one."""
+        if step is None:
+            step = self.latest_step()
+        assert step is not None, "no checkpoint found"
+        path = os.path.join(self.dir, f"step_{step:010d}", "spec.json")
+        if not os.path.exists(path):
+            return None
+        with open(path) as f:
+            return f.read()
 
     def restore(self, template, step: Optional[int] = None,
                 shardings=None) -> Tuple[int, Any]:

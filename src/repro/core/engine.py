@@ -85,6 +85,24 @@ class Engine:
     #: independent replica chains carried per state (1 for every engine
     #: except bitplane, whose observables are per-replica vectors)
     replicas: ClassVar[int] = 1
+    #: engine-specific config knobs this engine actually consumes --
+    #: ``repro.api.EngineSpec`` validates its params against this set at
+    #: construction time (DESIGN.md S10)
+    param_fields: ClassVar[tuple] = ()
+    #: name of the ``repro.core.distributed`` step factory that advances
+    #: this engine's random stream on a device mesh (``None`` = no
+    #: sharded execution); the capability flag behind ``MeshSpec``
+    dist_factory: ClassVar[Optional[str]] = None
+
+    @classmethod
+    def validate_lattice(cls, n: int, m: int) -> None:
+        """Raise ValueError when (n, m) violates this engine's layout
+        constraints -- called by ``RunSpec`` at construction, so bad
+        geometry fails before any trace (DESIGN.md S10)."""
+        if n % 2 or m % 2:
+            raise ValueError(
+                f"engine {cls.name!r} needs even lattice dims for the "
+                f"checkerboard decomposition, got ({n}, {m})")
 
     def __init__(self, config):
         self.cfg = config
@@ -299,6 +317,7 @@ class BasicPhiloxEngine(_PlanesEngine, CounterEngine):
     """Basic engine with in-place counter-based Philox (DESIGN.md S6.2)."""
 
     name = "basic_philox"
+    dist_factory = "basic"
 
     def color_update(self, target, op, inv_temp, is_black, seed, offset,
                      ctx=None):
@@ -317,6 +336,7 @@ class StencilPallasEngine(_PlanesEngine, CounterEngine):
 
     name = "stencil_pallas"
     resident_family = "stencil"
+    dist_factory = "basic"  # bit-for-bit the basic_philox stream
 
     def __init__(self, config):
         super().__init__(config)
@@ -349,6 +369,16 @@ class MultispinEngine(CounterEngine):
     """Paper S3.3 multi-spin coding: 8 spins/uint32 word (DESIGN.md S2)."""
 
     name = "multispin"
+    dist_factory = "packed"
+
+    @classmethod
+    def validate_lattice(cls, n, m):
+        super().validate_lattice(n, m)
+        if (m // 2) % lat.SPINS_PER_WORD:
+            raise ValueError(
+                f"engine {cls.name!r} packs {lat.SPINS_PER_WORD} "
+                f"spins/uint32 word: the compact plane width m/2 must "
+                f"be a multiple of {lat.SPINS_PER_WORD}, got m={m}")
 
     def from_full(self, full):
         return ms.pack_lattice(*lat.split_checkerboard(full))
@@ -431,6 +461,16 @@ class BitplaneEngine(CounterEngine):
 
     name = "bitplane"
     replicas = bp.N_REPLICAS
+    dist_factory = "bitplane"
+
+    @classmethod
+    def validate_lattice(cls, n, m):
+        super().validate_lattice(n, m)
+        if (m // 2) % 4:
+            raise ValueError(
+                f"engine {cls.name!r} draws one Philox call per 4-site "
+                f"group: the compact plane width m/2 must be a multiple "
+                f"of 4, got m={m}")
 
     def init_state(self, key):
         cfg = self.cfg
@@ -528,6 +568,7 @@ class TensorCoreEngine(Engine):
     """Paper S3.2: neighbor sums as banded MXU matmuls (DESIGN.md S6.1)."""
 
     name = "tensorcore"
+    param_fields = ("tc_block",)
 
     def from_full(self, full):
         return tc.decompose(full)
@@ -609,6 +650,7 @@ class SpinGlassEngine(Engine):
     """
 
     name = "spinglass"
+    param_fields = ("p_ferro",)
 
     _COUPLING_TAG = 0x51A55  # "glass": fold_in tag for the coupling stream
 

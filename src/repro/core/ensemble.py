@@ -1,29 +1,32 @@
-"""Batched ensemble driver: one compiled sweep for a whole phase diagram.
+"""Ensemble: compatibility shim over :class:`repro.api.Session`.
 
-The TPU-cluster follow-up to the paper (Yang et al., "High Performance
-Monte Carlo Simulation of Ising Model on TPU Clusters") batches many
-replicas/temperatures through one update; this driver is that idea on top
-of the engine registry.  Any *counter-based* engine (Philox randomness
-addressed by (seed, position, offset) -- DESIGN.md S4) exposes a pure
-``sweep_fn`` whose seed and temperature are traceable, so the whole
-ensemble advances in ONE ``jax.vmap``-ed, jit-compiled call over a batch
-axis of (temperature, seed) pairs: a phase-diagram scan or a replica set
-costs one compilation and one device dispatch per measurement interval.
+.. deprecated:: PR 5
+   ``Ensemble`` remains fully supported, but it is now a thin façade
+   over the unified ``repro.api`` entry point -- a ``RunSpec`` with a
+   ``BatchSpec``, executed by ``Session``'s vmapped ensemble runner
+   (the batched-update idea of the TPU-cluster follow-up paper, Yang et
+   al.).  New code should build a ``RunSpec`` directly; this class is
+   kept so existing call sites keep working bit-for-bit.
 
-Key-based engines (``basic``, ``tensorcore``, ``wolff``, ``spinglass``)
-are rejected: their randomness is not a pure function of traced inputs,
-so members would not reproduce the single-simulation trajectories.
+The shim also tightens two legacy sharp edges (PR 5 satellites):
+
+* seeds >= 2**32 now raise instead of being silently masked with
+  ``& 0xFFFFFFFF`` -- the vmapped Philox key is a traced uint32 lane
+  (DESIGN.md S4), so a masked seed would *not* follow the 64-bit
+  single-``Simulation`` stream its docstring promises;
+* ``temperature``/``seed`` of member 0 now reach the internal engine
+  config instead of being dropped on the floor (the old constructor
+  pinned defaults ``temperature=2.0, seed=1234`` regardless of the
+  members); ``tc_block``/``p_ferro`` are accepted and forwarded to any
+  engine that declares them in ``param_fields`` -- today no
+  counter-based engine does, so they are validated-but-inert
+  future-proofing for batched tensorcore/spin-glass variants.
 """
 from __future__ import annotations
 
 from typing import Optional, Sequence
 
-import jax
-import jax.numpy as jnp
 import numpy as np
-
-from .engine import make_engine
-from .sim import SimConfig
 
 
 class Ensemble:
@@ -31,62 +34,72 @@ class Ensemble:
 
     Bit-exactness contract: member ``i`` of the ensemble follows exactly
     the trajectory of ``Simulation(SimConfig(temperature=temps[i],
-    seed=seeds[i], ...))`` for seeds < 2**32 (tested in
-    tests/test_ensemble.py).
+    seed=seeds[i], ...))`` (tested in tests/test_ensemble.py; seeds are
+    validated < 2**32, where the contract provably holds).
     """
 
     def __init__(self, n: int, m: int, temperatures: Sequence[float],
                  seeds: Optional[Sequence[int]] = None,
-                 engine: str = "multispin", init_p_up: float = 0.5):
+                 engine: str = "multispin", init_p_up: float = 0.5,
+                 tc_block: int = 128, p_ferro: float = 0.5):
+        from repro.api import (BatchSpec, EngineSpec, LatticeSpec,
+                               RunSpec, Session)
         temps = np.asarray(temperatures, np.float32)
-        assert temps.ndim == 1 and temps.size > 0, "need a 1-D temp batch"
-        if seeds is None:
-            seeds = np.arange(temps.size)
-        seeds = np.asarray(seeds)
-        assert seeds.shape == temps.shape, (seeds.shape, temps.shape)
+        if temps.ndim != 1 or temps.size == 0:
+            raise ValueError(f"need a 1-D temp batch, got shape "
+                             f"{temps.shape}")
+        if seeds is not None:
+            seeds_arr = np.asarray(seeds)
+            if seeds_arr.shape != temps.shape:
+                raise ValueError(f"seeds/temps shape mismatch: "
+                                 f"{seeds_arr.shape} vs {temps.shape}")
+            seeds = tuple(int(s) for s in seeds_arr.tolist())
+        params = {k: v for k, v in
+                  (("tc_block", tc_block), ("p_ferro", p_ferro))
+                  if k in _param_fields(engine)}
+        spec = RunSpec(
+            lattice=LatticeSpec(n=n, m=m, init_p_up=init_p_up),
+            engine=EngineSpec(name=engine, params=params),
+            batch=BatchSpec(
+                temperatures=tuple(
+                    float(t) for t in np.asarray(temperatures).tolist()),
+                seeds=seeds))
+        self._session = Session.open(spec)
+        self.config = self._session._runner.cfg
+        self.temperatures = self._session._runner.temperatures
 
-        cfg = SimConfig(n=n, m=m, engine=engine, init_p_up=init_p_up)
-        self.engine = make_engine(cfg)
-        if not self.engine.counter_based:
-            raise ValueError(
-                f"engine {engine!r} is not counter-based; Ensemble needs a "
-                "Philox engine whose sweep_fn is a pure function of "
-                "(seed, offset) -- see DESIGN.md S3/S4")
-        self.config = cfg
-        self.temperatures = temps
-        # invert in python-float precision exactly like SimConfig.inv_temp
-        # (1.0/float32(T) can land 1 ulp off float32(1.0/T), which would
-        # eventually fork a member from its Simulation trajectory)
-        self.inv_temps = jnp.asarray(
-            [1.0 / float(t) for t in np.asarray(temperatures).tolist()],
-            jnp.float32)
-        self.seeds = jnp.asarray(seeds.astype(np.int64) & 0xFFFFFFFF,
-                                 jnp.uint32)
-        self.step_count = 0
-        self._jit_cache = {}
+    # -- delegated internals ----------------------------------------------
+    @property
+    def engine(self):
+        return self._session._runner.engine
 
-        keys = jax.vmap(jax.random.PRNGKey)(
-            jnp.asarray(seeds, jnp.int32))
-        self.states = jax.jit(jax.vmap(self.engine.init_state))(keys)
-        # measurement wrappers jitted once (jit caches on the fn object)
-        self._magnetizations = jax.jit(jax.vmap(self.engine.magnetization))
-        self._full_lattices = jax.jit(jax.vmap(self.engine.full_lattice))
+    @property
+    def states(self):
+        return self._session.state
+
+    @states.setter
+    def states(self, v):
+        self._session.state = v
+
+    @property
+    def inv_temps(self):
+        return self._session._runner.inv_temps
+
+    @property
+    def seeds(self):
+        return self._session._runner.seeds
+
+    @property
+    def step_count(self) -> int:
+        return self._session.step_count
+
+    @step_count.setter
+    def step_count(self, v: int) -> None:
+        self._session.step_count = v
 
     @property
     def size(self) -> int:
-        return int(self.temperatures.size)
-
-    def _compiled(self, n_sweeps: int):
-        fn = self._jit_cache.get(n_sweeps)
-        if fn is None:
-            def one(state, inv_temp, seed, start_offset):
-                state = self.engine.sweep_fn(state, inv_temp, seed,
-                                             start_offset, n_sweeps)
-                return state, self.engine.magnetization(state)
-
-            fn = jax.jit(jax.vmap(one, in_axes=(0, 0, 0, None)))
-            self._jit_cache[n_sweeps] = fn
-        return fn
+        return self._session._runner.size
 
     def run(self, n_sweeps: int) -> np.ndarray:
         """Advance every member ``n_sweeps`` sweeps in one vmapped call.
@@ -94,19 +107,15 @@ class Ensemble:
         Returns the (B,) per-member magnetizations after the sweeps -- at
         fixed seeds this IS the magnetization-vs-temperature curve.
         """
-        self.states, mags = self._compiled(n_sweeps)(
-            self.states, self.inv_temps, self.seeds,
-            jnp.uint32(2 * self.step_count))
-        self.step_count += n_sweeps
-        return np.asarray(mags)
+        return self._session.run(n_sweeps)
 
     def magnetizations(self) -> np.ndarray:
         """(B,) per-member magnetization of the current states."""
-        return np.asarray(self._magnetizations(self.states))
+        return self._session.magnetization()
 
     def full_lattices(self) -> np.ndarray:
         """(B, N, M) stacked +-1 lattices (measurement/debug view)."""
-        return np.asarray(self._full_lattices(self.states))
+        return self._session.full_lattice()
 
     def measure(self, plan) -> dict:
         """Run a :class:`repro.analysis.MeasurementPlan` on every member
@@ -114,17 +123,37 @@ class Ensemble:
 
         Returns ``{field: (n_measure, B) float32 ndarray}``.
         """
-        from repro.analysis.measure import measure_scan_batched
-        self.states, traj, self.step_count = measure_scan_batched(
-            self.engine, self.states, self.inv_temps, self.seeds, plan,
-            step_count=self.step_count)
-        return traj
+        return self._session.measure(plan)
 
     def trajectory(self, n_measure: int, sweeps_between: int,
                    thermalize: int = 0) -> np.ndarray:
         """(n_measure, B) magnetization samples along the trajectory --
         the whole measured trajectory is one compiled dispatch."""
-        from repro.analysis.measure import MeasurementPlan
-        plan = MeasurementPlan(n_measure, sweeps_between, thermalize,
-                               fields=("m",))
-        return self.measure(plan)["m"]
+        return self._session.trajectory(n_measure, sweeps_between,
+                                        thermalize)
+
+    # -- fault tolerance (PR 5 satellite: batched checkpoints) -------------
+    def save(self, path: str) -> None:
+        """Atomic checkpoint of ALL member states + step count + spec
+        (the unified ``Session`` layout; restorable by either side)."""
+        self._session.save(path)
+
+    @classmethod
+    def restore(cls, path: str) -> "Ensemble":
+        from repro.api import Session
+        session = Session.restore(path)
+        if session.mode != "ensemble":
+            raise ValueError(
+                f"{path} holds a {session.mode!r} checkpoint; restore "
+                "it with Simulation.restore or repro.api.Session")
+        ens = cls.__new__(cls)
+        ens._session = session
+        ens.config = session._runner.cfg
+        ens.temperatures = session._runner.temperatures
+        return ens
+
+
+def _param_fields(engine: str):
+    from .engine import ENGINES
+    cls = ENGINES.get(engine)
+    return cls.param_fields if cls is not None else ()

@@ -1,24 +1,27 @@
-"""Simulation driver: registry-dispatched engines, measurements, checkpoints.
+"""Simulation: compatibility shim over :class:`repro.api.Session`.
 
-``Simulation`` owns the (state, step_count) pair and delegates every
-engine-specific operation -- state layout, sweeps, observables, checkpoint
-(de)serialization -- to the :mod:`repro.core.engine` registry, so the
-driver contains no per-engine branches (DESIGN.md S3).  State (lattice +
-RNG offset + step counter) checkpoints atomically to .npz; a restarted
-run of a counter-based engine continues the exact Philox stream
-(fault-tolerance contract, tested in tests/).
+.. deprecated:: PR 5
+   ``Simulation``/``SimConfig`` remain fully supported, but they are now
+   a thin façade over the unified ``repro.api`` entry point -- a
+   ``RunSpec`` with neither batch nor mesh, executed by ``Session``'s
+   single-mode runner.  New code should build a ``RunSpec`` directly
+   (one typed, serializable config for single, ensemble, and sharded
+   runs -- DESIGN.md S10); this class is kept so every existing call
+   site and checkpoint keeps working bit-for-bit.
+
+Checkpoints written here carry BOTH the serialized ``RunSpec``
+(``spec_json``, the unified layout ``Session.restore`` reads) and the
+legacy ``config_json`` so a restored ``.config`` compares equal to the
+saved one including engine-irrelevant knobs.
 """
 from __future__ import annotations
 
 import dataclasses
 import json
-import os
-import tempfile
 
-import jax
 import numpy as np
 
-from .engine import ENGINES, make_engine
+from .engine import ENGINES, make_engine  # noqa: F401  (re-export)
 
 
 @dataclasses.dataclass
@@ -43,31 +46,48 @@ class SimConfig:
 
 
 class Simulation:
-    """2D Ising simulation with a registry-pluggable engine."""
+    """2D Ising simulation with a registry-pluggable engine (shim)."""
 
     def __init__(self, config: SimConfig):
+        from repro.api import RunSpec, Session
         self.config = config
-        self.engine = make_engine(config)
-        self.step_count = 0
-        self.state = self.engine.init_state(
-            jax.random.PRNGKey(config.seed))
+        self._session = Session.open(RunSpec.from_sim_config(config))
+
+    # -- delegated internals ----------------------------------------------
+    @property
+    def engine(self):
+        return self._session._runner.engine
+
+    @property
+    def state(self):
+        return self._session.state
+
+    @state.setter
+    def state(self, v):
+        self._session.state = v
+
+    @property
+    def step_count(self) -> int:
+        return self._session.step_count
+
+    @step_count.setter
+    def step_count(self, v: int) -> None:
+        self._session.step_count = v
 
     # -- state ------------------------------------------------------------
-    def full_lattice(self) -> jax.Array:
-        return self.engine.full_lattice(self.state)
+    def full_lattice(self):
+        return self._session.full_lattice()
 
     # -- dynamics ---------------------------------------------------------
     def run(self, n_sweeps: int) -> None:
-        self.state = self.engine.sweeps(self.state, n_sweeps,
-                                        self.step_count)
-        self.step_count += n_sweeps
+        self._session.run(n_sweeps)
 
     # -- measurement ------------------------------------------------------
     def magnetization(self) -> float:
-        return float(self.engine.magnetization(self.state))
+        return self._session.magnetization()
 
     def energy(self) -> float:
-        return float(self.engine.energy(self.state))
+        return self._session.energy()
 
     def measure(self, plan) -> dict:
         """Run a :class:`repro.analysis.MeasurementPlan` in ONE compiled
@@ -75,10 +95,7 @@ class Simulation:
 
         Returns ``{field: (n_measure,) float32 ndarray}``.
         """
-        from repro.analysis.measure import measure_scan
-        self.state, traj, self.step_count = measure_scan(
-            self.engine, self.state, plan, step_count=self.step_count)
-        return traj
+        return self._session.measure(plan)
 
     def trajectory(self, n_measure: int, sweeps_between: int,
                    thermalize: int = 0) -> np.ndarray:
@@ -86,39 +103,27 @@ class Simulation:
         per trajectory, bit-identical to the legacy per-sample loop.
         Shape ``(n_measure,)``; replicated engines (bitplane) return
         ``(n_measure, replicas)`` -- one series per replica chain."""
-        from repro.analysis.measure import MeasurementPlan
-        plan = MeasurementPlan(n_measure, sweeps_between, thermalize,
-                               fields=("m",))
-        return self.measure(plan)["m"]
+        return self._session.trajectory(n_measure, sweeps_between,
+                                        thermalize)
 
     # -- fault tolerance ---------------------------------------------------
     def save(self, path: str) -> None:
-        """Atomic checkpoint (write temp + rename)."""
-        cfg = self.config
-        arrays = {f"state_{k}": v
-                  for k, v in self.engine.state_arrays(self.state).items()}
-        fd, tmp = tempfile.mkstemp(dir=os.path.dirname(path) or ".",
-                                   suffix=".tmp")
-        with os.fdopen(fd, "wb") as f:
-            np.savez(f, step_count=self.step_count,
-                     config_json=json.dumps(dataclasses.asdict(cfg)),
-                     **arrays)
-        os.replace(tmp, path)
+        """Atomic checkpoint (write temp + rename); unified spec layout
+        plus the legacy ``config_json`` for exact config round-trip."""
+        self._session.save(path, extra={
+            "config_json": json.dumps(dataclasses.asdict(self.config))})
 
     @classmethod
     def restore(cls, path: str) -> "Simulation":
-        with np.load(path, allow_pickle=False) as z:
-            if "config_json" not in z.files:
-                raise ValueError(
-                    f"{path}: not a Simulation checkpoint in the registry "
-                    "layout (missing 'config_json'; pre-registry .npz "
-                    "files are not restorable by this release)")
-            cfg = SimConfig(**json.loads(str(z["config_json"])))
-            sim = cls.__new__(cls)
-            sim.config = cfg
-            sim.engine = make_engine(cfg)
-            sim.step_count = int(z["step_count"])
-            arrays = {k[len("state_"):]: z[k] for k in z.files
-                      if k.startswith("state_")}
-            sim.state = sim.engine.from_arrays(arrays)
+        from repro.api import Session
+        from repro.api.session import _load_checkpoint
+        spec, step_count, arrays, legacy = _load_checkpoint(path)
+        if spec.mode != "single":
+            raise ValueError(
+                f"{path} holds a {spec.mode!r} checkpoint; restore it "
+                "with repro.api.Session.restore")
+        sim = cls.__new__(cls)
+        sim.config = SimConfig(**legacy) if legacy is not None \
+            else spec.sim_config()
+        sim._session = Session._from_arrays(spec, arrays, step_count)
         return sim

@@ -1,0 +1,489 @@
+"""repro.api: spec validation, JSON round-trips, Session dispatch,
+unified checkpoints, shim equivalence, and the CLI (DESIGN.md S10)."""
+import json
+import os
+import sys
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.api import (BatchSpec, EngineSpec, LatticeSpec, MeshSpec,
+                       RunSpec, Session, SweepSpec, describe)
+from repro.core.engine import ENGINES, make_engine
+from repro.core.ensemble import Ensemble
+from repro.core.sim import SimConfig, Simulation
+
+sys.path.insert(0, os.path.dirname(__file__))
+from _hypothesis_compat import given, settings, st  # noqa: E402
+
+#: acceptance-criteria engines: one per family, single + ensemble mode
+ACCEPT_ENGINES = ("stencil_pallas", "multispin", "bitplane")
+
+
+# ---------------------------------------------------------------------------
+# construction-time validation
+# ---------------------------------------------------------------------------
+
+def test_engine_spec_rejects_unknown_engine():
+    with pytest.raises(ValueError, match="unknown engine"):
+        EngineSpec("nope")
+
+
+def test_engine_spec_rejects_undeclared_params():
+    with pytest.raises(ValueError, match="takes no params"):
+        EngineSpec("multispin", params={"tc_block": 64})
+    with pytest.raises(ValueError, match="takes no params"):
+        EngineSpec("tensorcore", params={"p_ferro": 0.5})
+    # declared params pass and normalize to a sorted tuple
+    assert EngineSpec("tensorcore",
+                      params={"tc_block": 64}).param_dict == {
+                          "tc_block": 64}
+    with pytest.raises(ValueError, match="tc_block"):
+        EngineSpec("tensorcore", params={"tc_block": -1})
+    with pytest.raises(ValueError, match="p_ferro"):
+        EngineSpec("spinglass", params={"p_ferro": 1.5})
+
+
+def test_batch_requires_counter_based_engine():
+    for engine in ("basic", "tensorcore", "wolff", "spinglass"):
+        with pytest.raises(ValueError, match="not counter-based"):
+            RunSpec(lattice=LatticeSpec(16, 16),
+                    engine=EngineSpec(engine),
+                    batch=BatchSpec(temperatures=(2.0,)))
+
+
+def test_mesh_requires_distributable_engine():
+    with pytest.raises(ValueError, match="no distributed step"):
+        RunSpec(lattice=LatticeSpec(16, 16), engine=EngineSpec("wolff"),
+                mesh=MeshSpec((1, 1), ("data", "model")))
+
+
+def test_batch_plus_mesh_unsupported():
+    with pytest.raises(ValueError, match="batch \\+ mesh"):
+        RunSpec(lattice=LatticeSpec(16, 16),
+                engine=EngineSpec("multispin"),
+                batch=BatchSpec(temperatures=(2.0,)),
+                mesh=MeshSpec((1, 1), ("data", "model")))
+
+
+def test_batch_seeds_over_32_bits_raise():
+    """The legacy Ensemble silently masked seeds with & 0xFFFFFFFF; the
+    spec rejects them up front (they cannot match the 64-bit
+    single-simulation Philox stream)."""
+    with pytest.raises(ValueError, match="2\\*\\*32"):
+        BatchSpec(temperatures=(2.0,), seeds=(2 ** 32,))
+    with pytest.raises(ValueError, match="2\\*\\*32"):
+        Ensemble(16, 16, [2.0], seeds=[2 ** 32 + 5])
+    # boundary value passes
+    BatchSpec(temperatures=(2.0,), seeds=(2 ** 32 - 1,))
+
+
+def test_lattice_constraints_validated_at_construction():
+    with pytest.raises(ValueError, match="even"):
+        LatticeSpec(15, 16)
+    # multispin packs 8 spins/word: m/2 % 8 != 0 fails at spec time,
+    # not deep inside a trace
+    with pytest.raises(ValueError, match="multiple of 8"):
+        RunSpec(lattice=LatticeSpec(16, 10),
+                engine=EngineSpec("multispin"))
+    with pytest.raises(ValueError, match="multiple of 4"):
+        RunSpec(lattice=LatticeSpec(16, 10),
+                engine=EngineSpec("bitplane"))
+    # basic has no packing constraint: m=10 is fine
+    RunSpec(lattice=LatticeSpec(16, 10), engine=EngineSpec("basic"))
+
+
+def test_batch_grid_cross_product():
+    b = BatchSpec(temperatures=(1.5, 2.5), seeds=(7, 8, 9), grid=True)
+    assert b.size == 6
+    assert b.members[:3] == ((1.5, 7), (1.5, 8), (1.5, 9))
+    z = BatchSpec(temperatures=(1.5, 2.5))
+    assert z.member_seeds == (0, 1)
+    with pytest.raises(ValueError, match="len\\(seeds\\)"):
+        BatchSpec(temperatures=(1.5, 2.5), seeds=(1,))
+
+
+# ---------------------------------------------------------------------------
+# JSON round-trips (every engine's param set)
+# ---------------------------------------------------------------------------
+
+def _spec_params_for(engine):
+    if engine == "tensorcore":
+        return {"tc_block": 8}
+    if engine == "spinglass":
+        return {"p_ferro": 0.25}
+    return {}
+
+
+@pytest.mark.parametrize("engine", sorted(ENGINES))
+def test_runspec_json_roundtrip_every_engine(engine):
+    spec = RunSpec(lattice=LatticeSpec(16, 16, init_p_up=0.75),
+                   engine=EngineSpec(engine,
+                                     params=_spec_params_for(engine)),
+                   temperature=2.125, seed=(1 << 40) + 3,
+                   sweep=SweepSpec(thermalize=5, measure_every=2,
+                                   n_measure=7, fields=("m",)))
+    back = RunSpec.from_json(spec.to_json())
+    assert back == spec
+    assert json.loads(back.to_json()) == json.loads(spec.to_json())
+
+
+@settings(max_examples=30)
+@given(cfg=st.tuples(
+    st.integers(1, 8),                  # lattice half-rows
+    st.integers(1, 4),                  # lattice m/16
+    st.floats(0.5, 5.0),                # temperature
+    st.integers(0, 2 ** 32 - 1),        # seed
+    st.floats(0.0, 1.0),                # init_p_up
+    st.booleans(),                      # with sweep?
+    st.booleans(),                      # with batch?
+    st.integers(0, 7),                  # engine pick (counter-based set)
+))
+def test_runspec_json_roundtrip_property(cfg):
+    """Lossless to_json/from_json over randomized spec trees."""
+    rows, mdiv, temp, seed, p_up, with_sweep, with_batch, pick = cfg
+    counter = sorted(n for n, c in ENGINES.items() if c.counter_based)
+    engine = counter[pick % len(counter)]
+    sweep = SweepSpec(thermalize=rows, measure_every=1 + mdiv,
+                      n_measure=1 + rows) if with_sweep else None
+    batch = BatchSpec(temperatures=(temp, temp + 0.5),
+                      seeds=(seed, seed // 2)) if with_batch else None
+    spec = RunSpec(lattice=LatticeSpec(2 * rows, 16 * mdiv,
+                                       init_p_up=p_up),
+                   engine=EngineSpec(engine),
+                   temperature=temp, seed=seed, sweep=sweep, batch=batch)
+    back = RunSpec.from_json(spec.to_json())
+    assert back == spec
+
+
+def test_from_dict_rejects_unknown_keys():
+    """A typo'd spec document must fail loudly, not silently run a
+    different run (e.g. a misspelled 'sweep' dropping thermalization)."""
+    good = RunSpec(lattice=LatticeSpec(16, 16),
+                   engine=EngineSpec("multispin")).to_dict()
+    with pytest.raises(ValueError, match="unknown key"):
+        RunSpec.from_dict({**good, "swep": {"n_measure": 5}})
+    with pytest.raises(ValueError, match="unknown key"):
+        EngineSpec.from_dict({"name": "multispin", "parms": {}})
+    with pytest.raises(ValueError, match="unknown key"):
+        BatchSpec.from_dict({"temperatures": [2.0], "sheeds": [1]})
+    with pytest.raises(ValueError, match="unknown key"):
+        SweepSpec.from_dict({"thermalise": 5, "n_measure": 2})
+    with pytest.raises(ValueError, match="unknown key"):
+        MeshSpec.from_dict({"shape": [1, 1], "axes": ["a", "b"]})
+    with pytest.raises(ValueError, match="unknown key"):
+        LatticeSpec.from_dict({"n": 16, "m": 16, "p_up": 1.0})
+
+
+def test_load_spec_reads_checkpoint_without_state(tmp_path):
+    spec = RunSpec(lattice=LatticeSpec(16, 16),
+                   engine=EngineSpec("multispin"), temperature=2.2,
+                   seed=3)
+    s = Session.open(spec)
+    s.run(1)
+    path = str(tmp_path / "ck.npz")
+    s.save(path)
+    from repro.api.session import load_spec
+    assert load_spec(path) == spec
+    bad = str(tmp_path / "bad.npz")
+    np.savez(bad, step_count=1)
+    with pytest.raises(ValueError, match="pre-registry"):
+        load_spec(bad)
+
+
+def test_sim_config_lift_round_trip():
+    cfg = SimConfig(n=16, m=32, temperature=2.25, seed=11,
+                    engine="tensorcore", tc_block=4, init_p_up=1.0)
+    spec = RunSpec.from_sim_config(cfg)
+    assert spec.engine.param_dict == {"tc_block": 4}
+    assert spec.sim_config() == cfg
+
+
+# ---------------------------------------------------------------------------
+# Session dispatch + unified checkpoints (acceptance criteria)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("engine", ACCEPT_ENGINES)
+def test_session_single_checkpoint_roundtrip(engine, tmp_path):
+    """spec -> Session -> save -> restore: lossless spec round-trip and
+    bit-exact continuation (restart == uninterrupted run)."""
+    spec = RunSpec(lattice=LatticeSpec(16, 16), engine=EngineSpec(engine),
+                   temperature=2.2, seed=9)
+    a = Session.open(spec)
+    a.run(3)
+    path = str(tmp_path / f"{engine}.npz")
+    a.save(path)
+    b = Session.restore(path)
+    assert b.spec == spec
+    assert b.step_count == a.step_count
+    a.run(2)
+    b.run(2)
+    np.testing.assert_array_equal(np.asarray(a.full_lattice()),
+                                  np.asarray(b.full_lattice()))
+
+
+@pytest.mark.parametrize("engine", ACCEPT_ENGINES)
+def test_session_ensemble_checkpoint_roundtrip(engine, tmp_path):
+    """Batched states + step_count + spec checkpoint (PR 5 satellite):
+    restart-exact for every member."""
+    spec = RunSpec(lattice=LatticeSpec(16, 16), engine=EngineSpec(engine),
+                   batch=BatchSpec(temperatures=(1.9, 2.6),
+                                   seeds=(3, 4)))
+    a = Session.open(spec)
+    a.run(3)
+    path = str(tmp_path / f"ens_{engine}.npz")
+    a.save(path)
+    b = Session.restore(path)
+    assert b.spec == spec
+    assert b.mode == "ensemble"
+    assert b.step_count == a.step_count
+    a.run(2)
+    b.run(2)
+    np.testing.assert_array_equal(a.full_lattice(), b.full_lattice())
+
+
+def test_session_measure_uses_spec_sweep():
+    spec = RunSpec(lattice=LatticeSpec(16, 16),
+                   engine=EngineSpec("multispin"), temperature=2.1,
+                   seed=5,
+                   sweep=SweepSpec(thermalize=2, measure_every=2,
+                                   n_measure=4, fields=("m", "e")))
+    s = Session.open(spec)
+    traj = s.measure()
+    assert traj["m"].shape == (4,) and traj["e"].shape == (4,)
+    assert s.step_count == spec.sweep.total_sweeps
+    with pytest.raises(ValueError, match="no plan"):
+        Session.open(RunSpec(lattice=LatticeSpec(16, 16),
+                             engine=EngineSpec("multispin"))).measure()
+
+
+def test_session_sharded_matches_single():
+    """MeshSpec dispatch reproduces the single-device trajectory
+    bit-for-bit (global-position-keyed Philox)."""
+    for engine in ("basic_philox", "multispin"):
+        kw = dict(lattice=LatticeSpec(16, 16),
+                  engine=EngineSpec(engine), temperature=2.1, seed=7)
+        sh = Session.open(RunSpec(mesh=MeshSpec((1, 1), ("data", "model")), **kw))
+        si = Session.open(RunSpec(**kw))
+        sh.run(2)
+        si.run(2)
+        sh.run(3)   # second chunk: offset bookkeeping across dispatches
+        si.run(3)
+        np.testing.assert_array_equal(np.asarray(sh.full_lattice()),
+                                      np.asarray(si.full_lattice()),
+                                      err_msg=engine)
+        assert sh.magnetization() == pytest.approx(si.magnetization())
+
+
+def test_session_sharded_checkpoint_roundtrip(tmp_path):
+    spec = RunSpec(lattice=LatticeSpec(16, 16),
+                   engine=EngineSpec("multispin"), temperature=2.1,
+                   seed=7, mesh=MeshSpec((1, 1), ("data", "model")))
+    a = Session.open(spec)
+    a.run(3)
+    path = str(tmp_path / "sharded.npz")
+    a.save(path)
+    b = Session.restore(path)
+    assert b.spec == spec
+    a.run(2)
+    b.run(2)
+    np.testing.assert_array_equal(np.asarray(a.full_lattice()),
+                                  np.asarray(b.full_lattice()))
+
+
+def test_describe_is_deviceless_plan():
+    spec = RunSpec(lattice=LatticeSpec(64, 64),
+                   engine=EngineSpec("stencil_pallas"),
+                   batch=None, sweep=SweepSpec(thermalize=10,
+                                               measure_every=2,
+                                               n_measure=5))
+    plan = describe(spec)
+    assert plan["mode"] == "single"
+    assert plan["counter_based"] is True
+    assert plan["resident"]["family"] == "stencil"
+    assert plan["total_sweeps"] == 20
+    assert RunSpec.from_dict(plan["spec"]) == spec
+    # a huge mesh describes fine without the devices existing
+    big = RunSpec(lattice=LatticeSpec(1024, 1024),
+                  engine=EngineSpec("multispin"),
+                  mesh=MeshSpec((16, 16), ("data", "model")))
+    assert describe(big)["mode"] == "sharded"
+
+
+# ---------------------------------------------------------------------------
+# shim equivalence: Simulation/Ensemble are bit-identical to the
+# pre-refactor drivers (legacy logic re-enacted inline)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("engine",
+                         ("basic", "basic_philox", "multispin",
+                          "bitplane", "tensorcore"))
+def test_simulation_shim_bitexact_vs_legacy_driver(engine):
+    """The pre-refactor Simulation did: state = engine.init_state(
+    PRNGKey(seed)); state = engine.sweeps(state, n, step).  The shim
+    must reproduce it bit-for-bit, chunk boundaries included."""
+    cfg = SimConfig(n=16, m=16, temperature=2.15, seed=13, engine=engine,
+                    tc_block=4)
+    sim = Simulation(cfg)
+    sim.run(3)
+    sim.run(2)
+
+    eng = make_engine(cfg)
+    state = eng.init_state(jax.random.PRNGKey(cfg.seed))
+    state = eng.sweeps(state, 3, 0)
+    state = eng.sweeps(state, 2, 3)
+    np.testing.assert_array_equal(np.asarray(sim.full_lattice()),
+                                  np.asarray(eng.full_lattice(state)))
+
+
+def test_ensemble_shim_bitexact_vs_legacy_driver():
+    """The pre-refactor Ensemble did: jit(vmap(sweep_fn + mag)) over
+    (states, inv_temps (1/float(T)), uint32 seeds) from vmapped
+    PRNGKeys.  The shim must reproduce members and returned mags
+    bit-for-bit."""
+    temps, seeds = [1.8, 2.5], [3, 4]
+    ens = Ensemble(16, 16, temps, seeds, engine="multispin")
+    mags = ens.run(3)
+
+    cfg = SimConfig(n=16, m=16, engine="multispin")
+    eng = make_engine(cfg)
+    keys = jax.vmap(jax.random.PRNGKey)(jnp.asarray(seeds, jnp.int32))
+    states = jax.jit(jax.vmap(eng.init_state))(keys)
+    inv_temps = jnp.asarray([1.0 / float(t) for t in temps], jnp.float32)
+    useeds = jnp.asarray(np.asarray(seeds, np.int64) & 0xFFFFFFFF,
+                         jnp.uint32)
+
+    def one(state, inv_temp, seed, start):
+        state = eng.sweep_fn(state, inv_temp, seed, start, 3)
+        return state, eng.magnetization(state)
+
+    states, ref_mags = jax.jit(jax.vmap(one, in_axes=(0, 0, 0, None)))(
+        states, inv_temps, useeds, jnp.uint32(0))
+    np.testing.assert_array_equal(mags, np.asarray(ref_mags))
+    fulls = jax.jit(jax.vmap(eng.full_lattice))(states)
+    np.testing.assert_array_equal(ens.full_lattices(), np.asarray(fulls))
+
+
+def test_ensemble_threads_member0_and_params_into_config():
+    """PR 5 satellite: temperature/seed/tc_block/p_ferro no longer
+    dropped on the floor when building the internal engine config."""
+    ens = Ensemble(16, 16, [1.75, 2.5], seeds=[42, 43],
+                   engine="multispin")
+    assert ens.config.temperature == 1.75
+    assert ens.config.seed == 42
+    assert ens.config.engine == "multispin"
+
+
+def test_ensemble_checkpoint_via_shim(tmp_path):
+    ens = Ensemble(16, 16, [1.9, 2.4], seeds=[5, 6], engine="multispin")
+    ens.run(3)
+    path = str(tmp_path / "ens.npz")
+    ens.save(path)
+    back = Ensemble.restore(path)
+    assert back.step_count == ens.step_count
+    ens.run(2)
+    back.run(2)
+    np.testing.assert_array_equal(ens.full_lattices(),
+                                  back.full_lattices())
+    samples = back.trajectory(n_measure=2, sweeps_between=1)
+    assert samples.shape == (2, 2)
+
+
+def test_simulation_checkpoint_cross_restorable_by_session(tmp_path):
+    """One unified layout: Simulation.save -> Session.restore and
+    Session.save -> Simulation.restore both continue bit-exactly."""
+    cfg = SimConfig(n=16, m=16, temperature=2.2, seed=7,
+                    engine="multispin")
+    sim = Simulation(cfg)
+    sim.run(4)
+    p1 = str(tmp_path / "sim.npz")
+    sim.save(p1)
+    sess = Session.restore(p1)
+    sim.run(3)
+    sess.run(3)
+    np.testing.assert_array_equal(np.asarray(sim.full_lattice()),
+                                  np.asarray(sess.full_lattice()))
+
+    p2 = str(tmp_path / "sess.npz")
+    sess.save(p2)
+    back = Simulation.restore(p2)
+    assert back.config == cfg
+    back.run(1)
+    sess.run(1)
+    np.testing.assert_array_equal(np.asarray(back.full_lattice()),
+                                  np.asarray(sess.full_lattice()))
+
+
+def test_simulation_restore_rejects_ensemble_checkpoint(tmp_path):
+    ens = Ensemble(16, 16, [2.0], seeds=[1], engine="multispin")
+    path = str(tmp_path / "e.npz")
+    ens.save(path)
+    with pytest.raises(ValueError, match="ensemble"):
+        Simulation.restore(path)
+
+
+# ---------------------------------------------------------------------------
+# CLI: python -m repro run (in-process: spawning interpreters is slow)
+# ---------------------------------------------------------------------------
+
+def _cli(*argv):
+    from repro.__main__ import main
+    return main(list(argv))
+
+
+def test_cli_dry_run_prints_plan(capsys):
+    rc = _cli("run", "--dry-run", "--n", "16", "--engine", "multispin",
+              "--temps", "1.8,2.2", "--n-measure", "3")
+    assert rc == 0
+    plan = json.loads(capsys.readouterr().out)
+    assert plan["mode"] == "ensemble" and plan["batch_size"] == 2
+
+
+def test_cli_dry_run_rejects_invalid_spec(tmp_path):
+    bad = tmp_path / "bad.json"
+    bad.write_text(json.dumps({
+        "engine": {"name": "wolff"},
+        "lattice": {"n": 16, "m": 16},
+        "batch": {"temperatures": [2.0]}}))
+    with pytest.raises(ValueError, match="not counter-based"):
+        _cli("run", "--dry-run", str(bad))
+
+
+@pytest.mark.parametrize("engine", ACCEPT_ENGINES)
+def test_cli_roundtrip_records_identical_spec(engine, tmp_path, capsys):
+    """The acceptance chain: spec JSON -> CLI run -> record; the
+    recorded spec is byte-identical to the canonical input spec, and
+    the CLI checkpoint restores to the same spec."""
+    spec = RunSpec(lattice=LatticeSpec(16, 16), engine=EngineSpec(engine),
+                   temperature=2.1, seed=3,
+                   sweep=SweepSpec(thermalize=1, measure_every=1,
+                                   n_measure=2, fields=("m",)))
+    spec_path = tmp_path / "spec.json"
+    spec_path.write_text(spec.to_json())
+    record = tmp_path / "rec.json"
+    ckpt = tmp_path / "ck.npz"
+    rc = _cli("run", str(spec_path), "--record", str(record),
+              "--save", str(ckpt))
+    capsys.readouterr()
+    assert rc == 0
+    rec = json.loads(record.read_text())
+    assert rec["meta"]["spec"] == spec.to_dict()
+    assert json.loads(rec["rows"][0]["spec"]) == spec.to_dict()
+    assert Session.restore(str(ckpt)).spec == spec
+
+
+def test_cli_restore_continues(tmp_path, capsys):
+    spec = RunSpec(lattice=LatticeSpec(16, 16),
+                   engine=EngineSpec("multispin"), temperature=2.0,
+                   seed=5)
+    spec_path = tmp_path / "spec.json"
+    spec_path.write_text(spec.to_json())
+    ckpt = tmp_path / "ck.npz"
+    assert _cli("run", str(spec_path), "--sweeps", "3",
+                "--save", str(ckpt)) == 0
+    assert _cli("run", "--restore", str(ckpt), "--sweeps", "2") == 0
+    capsys.readouterr()
+    ref = Session.open(spec)
+    ref.run(3)
