@@ -1,26 +1,40 @@
-"""Render EXPERIMENTS.md tables from results/dryrun.json, and diff
-BENCH_<stamp>.json perf records.
+"""Render EXPERIMENTS.md tables from results/dryrun.json, diff
+BENCH_<stamp>.json perf records, and render the bench trend report.
 
 Usage: PYTHONPATH=src python -m benchmarks.report [path]
        PYTHONPATH=src python -m benchmarks.report diff OLD.json NEW.json
-The first form prints markdown for S Dry-run and S Roofline; the second
+       PYTHONPATH=src python -m benchmarks.report trend [DIR_OR_FILE...] \
+           [--csv out.csv]
+
+The first form prints markdown for S Dry-run and S Roofline; ``diff``
 compares two `benchmarks/run.py --json` records with a % regression
-column (positive = NEW is slower).
+column (positive = NEW is slower) and prints a warning line per row
+slower than ``--warn-threshold`` (default the legacy 25%); ``trend``
+(also spelled ``--trend``) renders the accumulated BENCH history --
+default search path ``benchmarks/`` + ``results/`` -- into a per-engine
+flips/ns timeline (markdown to stdout, long-format CSV with ``--csv``).
 """
+import argparse
+import glob
 import json
+import os
 import sys
 
 import jax
-import numpy as np
 
 
 def _model_flops_ratio(r):
     """MODEL_FLOPS / HLO_FLOPs for the cell (see launch/roofline.py)."""
     from repro.configs import SHAPES, get_config
-    from repro.launch.roofline import count_params, model_flops
+    from repro.launch.roofline import count_params, flip_cost, model_flops
     if r["arch"].startswith("ising"):
-        # minimal spin-update work: ~10 flops per spin flip decision
-        useful = 10.0 * r.get("spins", 0) / r["chips"]
+        # useful work per attempted flip from the per-engine flip-cost
+        # model (launch/roofline.py), replacing the old flat 10 flops
+        engine = (r["arch"].split("-", 1)[1] if "-" in r["arch"]
+                  else "multispin")
+        cost = flip_cost(engine)
+        useful = (cost.flops_per_flip * cost.replicas
+                  * r.get("spins", 0) / r["chips"])
         return useful / r["flops"] if r.get("flops") else None
     cfg = get_config(r["arch"])
     shape = SHAPES[r["shape"]]
@@ -40,13 +54,26 @@ def _model_flops_ratio(r):
     return (mf / r["chips"]) / r["flops"] if r.get("flops") else None
 
 
-def diff(old_path, new_path):
+def _row_us(row):
+    """Timing of one bench row, tolerating both formats: the noise-model
+    median when recorded, else the legacy single mean."""
+    if "n_trials" in row:
+        return float(row["median_us_per_call"])
+    return float(row["us_per_call"])
+
+
+def diff(old_path, new_path, warn_threshold=0.25):
     """Markdown diff of two BENCH_<stamp>.json records by row name.
 
     When the NEW record was a filtered run (``--only``/``--engines`` in
     its meta), baseline rows outside the filter were never attempted --
     they are skipped rather than reported as "removed", so the CI smoke
     subset diffs cleanly against a full committed baseline.
+
+    Rows more than ``warn_threshold`` slower additionally print a
+    ``# WARNING`` line (the legacy flat check; the statistical gate is
+    ``python -m repro.perf.gate``).  Returns ``{"rows": [...],
+    "warnings": [names]}`` so the logic is testable.
     """
     with open(old_path) as f:
         old = json.load(f)
@@ -62,22 +89,124 @@ def diff(old_path, new_path):
     print("| bench | old us/call | new us/call | Δ% | old flips/ns |"
           " new flips/ns |")
     print("|---|---|---|---|---|---|")
+    out = {"rows": [], "warnings": []}
     for name in sorted(set(old_rows) | set(new_rows)):
         o, n = old_rows.get(name), new_rows.get(name)
         if n is None and filtered:
             continue
         if o is None or n is None:
             status = "added" if o is None else "removed"
-            ou = "-" if o is None else f"{o['us_per_call']:.1f}"
-            nu = "-" if n is None else f"{n['us_per_call']:.1f}"
+            ou = "-" if o is None else f"{_row_us(o):.1f}"
+            nu = "-" if n is None else f"{_row_us(n):.1f}"
             print(f"| {name} ({status}) | {ou} | {nu} | - | - | - |")
+            out["rows"].append({"name": name, "status": status})
             continue
-        ou, nu = o["us_per_call"], n["us_per_call"]
+        ou, nu = _row_us(o), _row_us(n)
         pct = (nu - ou) / ou * 100.0 if ou else float("nan")
         of = o["derived"].get("flips_per_ns", "-")
         nf = n["derived"].get("flips_per_ns", "-")
         print(f"| {name} | {ou:.1f} | {nu:.1f} | {pct:+.1f}% | {of} |"
               f" {nf} |")
+        out["rows"].append({"name": name, "status": "both",
+                            "old_us": ou, "new_us": nu, "pct": pct})
+        if ou and nu / ou > 1.0 + warn_threshold:
+            out["warnings"].append(name)
+    for name in out["warnings"]:
+        print(f"# WARNING: {name} more than "
+              f"{warn_threshold:.0%} slower than baseline")
+    return out
+
+
+# ---------------------------------------------------------------------------
+# trend: the accumulated BENCH history as a per-engine flips/ns timeline
+# ---------------------------------------------------------------------------
+
+def _collect_records(paths):
+    """BENCH records from files/dirs, sorted by meta stamp."""
+    files = []
+    for p in paths:
+        if os.path.isdir(p):
+            files.extend(sorted(glob.glob(os.path.join(p,
+                                                       "BENCH_*.json"))))
+        else:
+            files.append(p)
+    records = []
+    seen = set()
+    for path in files:
+        real = os.path.realpath(path)
+        if real in seen:
+            continue
+        seen.add(real)
+        with open(path) as f:
+            records.append((path, json.load(f)))
+    records.sort(key=lambda t: str(t[1].get("meta", {}).get("stamp", "")))
+    return records
+
+
+def trend(paths=("benchmarks", "results"), csv_path=None):
+    """Per-engine flips/ns timeline over the accumulated BENCH history.
+
+    Markdown to stdout: one line per bench row that carries a
+    throughput metric, one column per record (ordered by stamp), plus
+    the first→last Δ%.  ``csv_path`` additionally writes the long-form
+    CSV (one line per (stamp, row)) CI uploads as an artifact.
+    Returns ``{"stamps": [...], "series": {name: {stamp: value}}}``.
+    """
+    from repro.perf.gate import throughput
+    records = _collect_records(paths)
+    stamps, engines, series, pcts = [], {}, {}, {}
+    csv_lines = ["stamp,backend,name,engine,metric,value_flips_per_ns,"
+                 "median_us_per_call,n_trials,pct_of_roofline"]
+    for path, rec in records:
+        meta = rec.get("meta", {})
+        stamp = str(meta.get("stamp", os.path.basename(path)))
+        stamps.append(stamp)
+        for row in rec.get("rows", []):
+            key, v = throughput(row)
+            if v is None:
+                continue
+            name = row["name"]
+            series.setdefault(name, {})[stamp] = v
+            # newer records may add the engine tag rows in the oldest
+            # baseline predate -- any tagged record labels the series
+            eng = row["derived"].get("engine")
+            if eng:
+                engines[name] = eng
+            else:
+                engines.setdefault(name, "-")
+            pct = row["derived"].get("pct_of_roofline", "")
+            pcts.setdefault(name, {})[stamp] = pct
+            med = (row.get("median_us_per_call", row["us_per_call"]))
+            csv_lines.append(
+                f"{stamp},{meta.get('backend', '-')},{name},"
+                f"{row['derived'].get('engine', '-')},{key},{v},"
+                f"{med},{row.get('n_trials', 1)},{pct}")
+    print(f"### Bench trend — flips/ns over {len(records)} records\n")
+    if len(records) < 2:
+        print(f"(only {len(records)} BENCH record(s) found under "
+              f"{list(paths)} — commit or generate more to see a trend)\n")
+    header = "| engine | bench row | " + " | ".join(stamps) \
+        + " | Δ% first→last |"
+    print(header)
+    print("|" + "---|" * (len(stamps) + 3))
+    for name in sorted(series,
+                       key=lambda n: (engines.get(n, "-"), n)):
+        vals = [series[name].get(s) for s in stamps]
+        cells = ["-" if v is None else f"{v:.4f}" for v in vals]
+        present = [v for v in vals if v is not None]
+        if len(present) >= 2 and present[0]:
+            delta = (present[-1] - present[0]) / present[0] * 100.0
+            dcell = f"{delta:+.1f}%"
+        else:
+            dcell = "-"
+        print(f"| {engines.get(name, '-')} | {name} | "
+              + " | ".join(cells) + f" | {dcell} |")
+    if csv_path:
+        os.makedirs(os.path.dirname(csv_path) or ".", exist_ok=True)
+        with open(csv_path, "w") as f:
+            f.write("\n".join(csv_lines) + "\n")
+        print(f"\n(csv: {csv_path})")
+    return {"stamps": stamps, "series": series}
 
 
 def main(path="results/dryrun.json"):
@@ -119,8 +248,36 @@ def main(path="results/dryrun.json"):
               f" | {ratio_s} |")
 
 
+def cli(argv=None) -> int:
+    argv = list(sys.argv[1:] if argv is None else argv)
+    # legacy spellings: `report.py diff A B`, `report.py [dryrun.json]`,
+    # plus the `--trend` flag form the issue tracker asked for
+    if argv and argv[0] == "--trend":
+        argv[0] = "trend"
+    if argv and argv[0] == "diff":
+        ap = argparse.ArgumentParser(prog="benchmarks.report diff")
+        ap.add_argument("old")
+        ap.add_argument("new")
+        ap.add_argument("--warn-threshold", type=float, default=0.25)
+        args = ap.parse_args(argv[1:])
+        diff(args.old, args.new, warn_threshold=args.warn_threshold)
+        return 0
+    if argv and argv[0] == "trend":
+        ap = argparse.ArgumentParser(prog="benchmarks.report trend")
+        ap.add_argument("paths", nargs="*",
+                        default=["benchmarks", "results"],
+                        help="BENCH_*.json files or directories "
+                             "containing them (default: benchmarks/ "
+                             "and results/)")
+        ap.add_argument("--csv", default=None,
+                        help="also write the long-form CSV here")
+        args = ap.parse_args(argv[1:])
+        trend(args.paths or ["benchmarks", "results"],
+              csv_path=args.csv)
+        return 0
+    main(*argv)
+    return 0
+
+
 if __name__ == "__main__":
-    if len(sys.argv) > 1 and sys.argv[1] == "diff":
-        diff(*sys.argv[2:])
-    else:
-        main(*sys.argv[1:])
+    raise SystemExit(cli())

@@ -23,13 +23,23 @@ import jax.numpy as jnp
 import numpy as np
 
 
+# set by --trials: overrides every bench's iter count so each row gets
+# an n_trials-deep timing sample (median + IQR -- the noise model the
+# perf gate needs; EXPERIMENTS.md S Perf-gate)
+_TRIALS = None
+
+
 def _timeit(fn, *args, iters=3, warmup=1):
+    """Returns (mean_seconds, last_out, per_trial_seconds)."""
+    iters = _TRIALS or iters
     for _ in range(warmup):
         jax.block_until_ready(fn(*args))
-    t0 = time.perf_counter()
+    times = []
     for _ in range(iters):
+        t0 = time.perf_counter()
         out = jax.block_until_ready(fn(*args))
-    return (time.perf_counter() - t0) / iters, out
+        times.append(time.perf_counter() - t0)
+    return sum(times) / len(times), out, times
 
 
 # set in main(): a repro.analysis.RunRecorder; rows accumulate so --json
@@ -37,12 +47,32 @@ def _timeit(fn, *args, iters=3, warmup=1):
 _RECORDER = None
 
 
-def _row(name, us, derived):
-    if _RECORDER is None:  # bench called directly, outside main()
-        print(f"{name},{us:.1f},{derived}")
-        return
+def _row(name, us, derived, engine=None, k=1, times=None):
+    """One bench row.  ``engine`` attributes the row to a registry
+    engine: the flips/ns measurement gains ``pct_of_roofline`` for the
+    backend it ran on (``launch/roofline.py`` flip-cost model) and an
+    ``engine=`` tag the trend report groups by.  ``k`` is the resident
+    tier's sweeps/dispatch (divides the model's HBM bytes/flip).
+    ``times`` (per-trial seconds from ``_timeit``) adds the noise-model
+    fields; single-shot rows stay in the legacy format."""
     from repro.analysis.recorder import parse_derived
-    _RECORDER.record(name, us, **parse_derived(derived))
+    d = parse_derived(derived)
+    if engine is not None:
+        from repro.launch import roofline as rl
+        d["engine"] = engine
+        metric = d.get("replica_flips_per_ns", d.get("flips_per_ns"))
+        if isinstance(metric, float):
+            pct = rl.pct_of_roofline(metric, engine,
+                                     jax.default_backend(), k=k)
+            if pct is not None:
+                d["pct_of_roofline"] = round(pct, 4)
+    if _RECORDER is None:  # bench called directly, outside main()
+        extras = ";".join(f"{k_}={v}" for k_, v in d.items())
+        print(f"{name},{us:.1f},{extras}")
+        return
+    _RECORDER.record(name, us,
+                     times_us=[t * 1e6 for t in times] if times else None,
+                     **d)
 
 
 # ---------------------------------------------------------------------------
@@ -91,10 +121,11 @@ def table1_single_device(n=256, sweeps=10):
                         tc_block=64)
         eng = make_engine(cfg)
         state = eng.init_state(jax.random.PRNGKey(0))
-        dt, _ = _timeit(_sweep_stepper(eng, state, sweeps))
+        dt, _, ts = _timeit(_sweep_stepper(eng, state, sweeps))
         reps = ENGINES[name].replicas
         _row(f"t1_{name}", dt * 1e6,
-             f"flips_per_ns={reps*spins/dt/1e9:.4f}")
+             f"flips_per_ns={reps*spins/dt/1e9:.4f}",
+             engine=name, times=ts)
 
 
 # ---------------------------------------------------------------------------
@@ -111,9 +142,10 @@ def table2_multispin_sizes(sweeps=5):
         step = _rebind_stepper(
             lambda s: ms.run_sweeps_packed(*s, beta, sweeps, seed=1),
             ms.pack_lattice(*lat.split_checkerboard(full)))
-        dt, _ = _timeit(step, iters=2)
+        dt, _, ts = _timeit(step, iters=2)
         _row(f"t2_multispin_{n}x{n}", dt * 1e6,
-             f"flips_per_ns={n*n*sweeps/dt/1e9:.4f}")
+             f"flips_per_ns={n*n*sweeps/dt/1e9:.4f}",
+             engine="multispin", times=ts)
 
 
 def table2_ensemble_batch(sweeps=5, batch=8):
@@ -123,9 +155,10 @@ def table2_ensemble_batch(sweeps=5, batch=8):
     for n in (128, 256):
         ens = Ensemble(n=n, m=n, temperatures=[1.5] * batch,
                        seeds=list(range(batch)), engine="multispin")
-        dt, _ = _timeit(lambda: ens.run(sweeps), iters=2)
+        dt, _, ts = _timeit(lambda: ens.run(sweeps), iters=2)
         _row(f"t2_ensemble_B{batch}_multispin_{n}x{n}", dt * 1e6,
-             f"flips_per_ns={batch*n*n*sweeps/dt/1e9:.4f}")
+             f"flips_per_ns={batch*n*n*sweeps/dt/1e9:.4f}",
+             engine="multispin", times=ts)
 
 
 # ---------------------------------------------------------------------------
@@ -151,9 +184,10 @@ def table3_weak_scaling(per_dev_rows=256, cols=512, sweeps=5):
         tick = _rebind_stepper(
             lambda s: step(*s, beta, jnp.uint32(0)),
             (jax.device_put(b, sh), jax.device_put(w, sh)))
-        dt, _ = _timeit(tick, iters=2)
+        dt, _, ts = _timeit(tick, iters=2)
         _row(f"t3_weak_basic_{nd}dev", dt * 1e6,
-             f"flips_per_ns={n*cols*sweeps/dt/1e9:.4f}")
+             f"flips_per_ns={n*cols*sweeps/dt/1e9:.4f}",
+             engine="basic", times=ts)
 
 
 def table4_strong_scaling(n=1024, cols=512, sweeps=5):
@@ -171,9 +205,10 @@ def table4_strong_scaling(n=1024, cols=512, sweeps=5):
         tick = _rebind_stepper(
             lambda s: step(*s, beta, jnp.uint32(0)),
             (jax.device_put(b.copy(), sh), jax.device_put(w.copy(), sh)))
-        dt, _ = _timeit(tick, iters=2)
+        dt, _, ts = _timeit(tick, iters=2)
         _row(f"t4_strong_basic_{nd}dev", dt * 1e6,
-             f"flips_per_ns={n*cols*sweeps/dt/1e9:.4f}")
+             f"flips_per_ns={n*cols*sweeps/dt/1e9:.4f}",
+             engine="basic", times=ts)
 
 
 def table5_packed_scaling(per_dev_rows=256, cols=1024, sweeps=5):
@@ -193,9 +228,10 @@ def table5_packed_scaling(per_dev_rows=256, cols=1024, sweeps=5):
         tick = _rebind_stepper(
             lambda s: step(*s, beta, jnp.uint32(0)),
             (jax.device_put(bw, sh), jax.device_put(ww, sh)))
-        dt, _ = _timeit(tick, iters=2)
+        dt, _, ts = _timeit(tick, iters=2)
         _row(f"t5_weak_multispin_{nd}dev", dt * 1e6,
-             f"flips_per_ns={n*cols*sweeps/dt/1e9:.4f}")
+             f"flips_per_ns={n*cols*sweeps/dt/1e9:.4f}",
+             engine="multispin", times=ts)
 
 
 # ---------------------------------------------------------------------------
@@ -222,20 +258,21 @@ def table1_measure_fusion(n=64, n_measure=64, sweeps_between=1):
             out[i] = sim.magnetization()
         return out
 
-    dt, _ = _timeit(legacy_loop, iters=2)
+    dt, _, ts = _timeit(legacy_loop, iters=2)
     _row(f"t1_traj_loop_multispin_{n}", dt * 1e6,
          f"dispatches={n_measure};us_per_sample={dt*1e6/n_measure:.1f};"
-         f"flips_per_ns={spins/dt/1e9:.4f}")
+         f"flips_per_ns={spins/dt/1e9:.4f}", engine="multispin", times=ts)
 
     sim2 = Simulation(SimConfig(**cfg))
     plan = MeasurementPlan(n_measure, sweeps_between, fields=("m",))
     before = msr.DISPATCH_COUNT
-    dt, _ = _timeit(lambda: sim2.measure(plan)["m"], iters=2)
-    dispatches = (msr.DISPATCH_COUNT - before) / 3  # warmup + 2 iters
+    dt, _, ts = _timeit(lambda: sim2.measure(plan)["m"], iters=2)
+    iters_run = len(ts) + 1  # warmup + timed iters
+    dispatches = (msr.DISPATCH_COUNT - before) / iters_run
     _row(f"t1_traj_scan_multispin_{n}", dt * 1e6,
          f"dispatches={dispatches:.0f};"
          f"us_per_sample={dt*1e6/n_measure:.1f};"
-         f"flips_per_ns={spins/dt/1e9:.4f}")
+         f"flips_per_ns={spins/dt/1e9:.4f}", engine="multispin", times=ts)
 
 
 # ---------------------------------------------------------------------------
@@ -260,12 +297,13 @@ def table1_bitplane(n=256, sweeps=10, pallas_n=64, pallas_sweeps=2):
         cfg = SimConfig(n=n, m=n, temperature=2.27, seed=1, engine=name)
         eng = make_engine(cfg)
         state = eng.init_state(jax.random.PRNGKey(0))
-        dt, _ = _timeit(_sweep_stepper(eng, state, sweeps))
+        dt, _, ts = _timeit(_sweep_stepper(eng, state, sweeps))
         reps = ENGINES[name].replicas
         flips = reps * n * n * sweeps
         _row(f"t1_bitplane_{name}_{n}", dt * 1e6,
              f"replica_flips_per_ns={flips/dt/1e9:.4f};"
-             f"philox_draws_per_spin={1.0/reps:.5f}")
+             f"philox_draws_per_spin={1.0/reps:.5f}",
+             engine=name, times=ts)
 
     # interpret-mode Pallas smoke (CI artifact row): small lattice, the
     # interpreter is orders of magnitude off real-kernel throughput
@@ -274,12 +312,13 @@ def table1_bitplane(n=256, sweeps=10, pallas_n=64, pallas_sweeps=2):
                         engine="bitplane_pallas")
         eng = make_engine(cfg)
         state = eng.init_state(jax.random.PRNGKey(0))
-        dt, _ = _timeit(_sweep_stepper(eng, state, pallas_sweeps),
-                        iters=1, warmup=1)
+        dt, _, ts = _timeit(_sweep_stepper(eng, state, pallas_sweeps),
+                            iters=1, warmup=1)
         flips = eng.replicas * pallas_n * pallas_n * pallas_sweeps
         _row(f"t1_bitplane_pallas_interp_{pallas_n}", dt * 1e6,
              f"replica_flips_per_ns={flips/dt/1e9:.4f};"
-             f"philox_draws_per_spin={1.0/eng.replicas:.5f}")
+             f"philox_draws_per_spin={1.0/eng.replicas:.5f}",
+             engine="bitplane_pallas", times=ts)
 
 
 # ---------------------------------------------------------------------------
@@ -309,19 +348,21 @@ def table1_resident(n=64, k=8):
         eng = make_engine(cfg)
         assert eng.resident_plan is not None, (name, n)
         state = eng.init_state(jax.random.PRNGKey(0))
-        dt_res, _ = _timeit(_sweep_stepper(eng, state, k), iters=2)
+        dt_res, _, ts_res = _timeit(_sweep_stepper(eng, state, k),
+                                    iters=2)
 
         fb = make_engine(cfg)
         fb.resident_plan = None   # force the per-half-sweep tier
         state = fb.init_state(jax.random.PRNGKey(0))
-        dt_half, _ = _timeit(_sweep_stepper(fb, state, k), iters=2)
+        dt_half, _, _ = _timeit(_sweep_stepper(fb, state, k), iters=2)
 
         _row(f"t1_resident_{name}_{n}_k{k}", dt_res * 1e6,
              f"k_sweeps_per_dispatch={k};kernel_dispatches_per_block=1;"
              f"halfsweep_dispatches_per_block={2 * k};"
              f"flips_per_ns={flips / dt_res / 1e9:.4f};"
              f"halfsweep_flips_per_ns={flips / dt_half / 1e9:.4f};"
-             f"speedup_vs_halfsweep={dt_half / dt_res:.2f}")
+             f"speedup_vs_halfsweep={dt_half / dt_res:.2f}",
+             engine=name, k=k, times=ts_res)
 
 
 # ---------------------------------------------------------------------------
@@ -347,17 +388,23 @@ def spec_bench(path, sweeps=10):
     session = Session.open(spec)
     if spec.sweep is not None:
         total = spec.sweep.total_sweeps
-        dt, _ = _timeit(lambda: session.measure(), iters=2)
+        dt, _, ts = _timeit(lambda: session.measure(), iters=2)
         kind, flips = "measure", reps * batch * n * m * total
     else:
-        dt, _ = _timeit(lambda: session.run(sweeps), iters=2)
+        dt, _, ts = _timeit(lambda: session.run(sweeps), iters=2)
         kind, flips = "run", reps * batch * n * m * sweeps
     name = f"spec_{kind}_{spec.engine.name}_{spec.mode}_{n}x{m}"
     if _RECORDER is None:
         print(f"{name},{dt * 1e6:.1f},flips_per_ns={flips/dt/1e9:.4f}")
         return
+    from repro.launch import roofline as rl
+    pct = rl.pct_of_roofline(flips / dt / 1e9, spec.engine.name,
+                             jax.default_backend())
+    extra = {} if pct is None else {"pct_of_roofline": round(pct, 4)}
     _RECORDER.record(name, dt * 1e6, spec=spec.to_json(),
-                     flips_per_ns=flips / dt / 1e9, batch=batch)
+                     times_us=[t * 1e6 for t in ts],
+                     flips_per_ns=flips / dt / 1e9, batch=batch,
+                     engine=spec.engine.name, **extra)
 
 
 # ---------------------------------------------------------------------------
@@ -416,19 +463,25 @@ def kernel_block_sweep(n=128, sweeps=3):
     for block_rows in (8, 16, 32, 64, 128):
         vmem_kb = 4 * block_rows * width_words * 4 / 1024
         # copies: the wrapper donates and bw/ww are reused per block size
-        dt, _ = _timeit(lambda: run_sweeps_multispin(
+        dt, _, ts = _timeit(lambda: run_sweeps_multispin(
             bw.copy(), ww.copy(), beta, sweeps, seed=1,
             block_rows=block_rows, interpret=True), iters=1, warmup=1)
         _row(f"kblocks_multispin_rows{block_rows}", dt * 1e6,
-             f"vmem_working_set_kb={vmem_kb:.0f}")
+             f"vmem_working_set_kb={vmem_kb:.0f}", times=ts)
 
 
 def main() -> None:
-    global _RECORDER, _ENGINE_FILTER
+    global _RECORDER, _ENGINE_FILTER, _TRIALS
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default="",
                     help="comma-separated substrings: run benches whose "
                          "name contains any of them")
+    ap.add_argument("--trials", type=int, default=None, metavar="N",
+                    help="time every bench N times (overrides per-bench "
+                         "iter counts) so each row records n_trials + "
+                         "median + IQR -- the noise model the perf gate "
+                         "consumes; use >= 5 when refreshing the "
+                         "committed baseline (EXPERIMENTS.md S Perf-gate)")
     ap.add_argument("--engines", default="",
                     help="comma-separated engine names: restrict the "
                          "registry-driven engine benches (table1) to this "
@@ -443,6 +496,9 @@ def main() -> None:
                          "alone unless --only also selects benches)")
     args, _ = ap.parse_known_args()
     _ENGINE_FILTER = tuple(e for e in args.engines.split(",") if e)
+    _TRIALS = args.trials
+    if _TRIALS is not None and _TRIALS < 1:
+        ap.error(f"--trials must be >= 1, got {_TRIALS}")
     from repro.core.engine import ENGINES
     unknown = sorted(set(_ENGINE_FILTER) - set(ENGINES))
     if unknown:
@@ -454,7 +510,8 @@ def main() -> None:
     _RECORDER = RunRecorder(echo=True, meta={
         "stamp": stamp, "backend": jax.default_backend(),
         "device_count": jax.device_count(), "only": args.only,
-        "engines": args.engines, "spec_file": args.spec})
+        "engines": args.engines, "spec_file": args.spec,
+        "trials": args.trials})
 
     benches = [table1_single_device, table1_measure_fusion,
                table1_bitplane, table1_resident, table2_multispin_sizes,
@@ -475,6 +532,10 @@ def main() -> None:
         spec_bench(args.spec)
 
     if args.json is not None:
+        # every emitted record must pass the perf-record schema -- a
+        # malformed row dies here, not in a later gate/trend run
+        from repro.perf.schema import validate_record
+        validate_record({"meta": _RECORDER.meta, "rows": _RECORDER.rows})
         path = _RECORDER.write_json(args.json)
         print(f"# wrote {path}")
 

@@ -139,12 +139,23 @@ def cmd_run(args) -> int:
         print(f"# wrote checkpoint {args.save} "
               f"(step {session.step_count})")
     if args.record is not None:
+        import time
+
+        import jax
+
         from repro.analysis.recorder import RunRecorder
+        from repro.perf.schema import validate_record
         rec = RunRecorder(meta={"spec": spec.to_dict(),
                                 "mode": session.mode,
-                                "step_count": session.step_count})
+                                "step_count": session.step_count,
+                                "stamp": time.strftime("%Y%m%d_%H%M%S"),
+                                "backend": jax.default_backend(),
+                                "device_count": jax.device_count()})
         for name, us, derived in rows:
             rec.record(name, us, spec=spec.to_json(), **derived)
+        # CLI records obey the same perf-record schema as the bench
+        # harness, so they diff/gate/trend interchangeably
+        validate_record({"meta": rec.meta, "rows": rec.rows})
         path = rec.write_json(args.record)
         print(f"# wrote record {path}")
     return 0

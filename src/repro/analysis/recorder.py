@@ -13,9 +13,41 @@ from __future__ import annotations
 import json
 import os
 import time
-from typing import Dict, List, Optional
+from typing import Dict, List, Optional, Sequence
 
 HEADER = "name,us_per_call,derived"
+
+
+def _percentile(sorted_vals: Sequence[float], q: float) -> float:
+    """Linear-interpolation percentile of an already-sorted sequence."""
+    n = len(sorted_vals)
+    if n == 1:
+        return float(sorted_vals[0])
+    pos = q * (n - 1)
+    lo = int(pos)
+    hi = min(lo + 1, n - 1)
+    frac = pos - lo
+    return float(sorted_vals[lo] * (1.0 - frac) + sorted_vals[hi] * frac)
+
+
+def timing_stats(times_us: Sequence[float]) -> Dict[str, object]:
+    """``n_trials`` / ``median_us_per_call`` / ``iqr_us_per_call`` from
+    per-trial wall-clock samples (microseconds).
+
+    A single trial records ``n_trials=1`` with NO iqr field -- one
+    sample says nothing about spread, and consumers (the perf gate)
+    must fall back to their legacy tolerance rather than read a
+    zero-IQR row as perfectly stable.
+    """
+    ts = sorted(float(t) for t in times_us)
+    if not ts:
+        return {}
+    out: Dict[str, object] = {"n_trials": len(ts),
+                              "median_us_per_call": _percentile(ts, 0.5)}
+    if len(ts) >= 2:
+        out["iqr_us_per_call"] = (_percentile(ts, 0.75)
+                                  - _percentile(ts, 0.25))
+    return out
 
 
 def _fmt(v) -> str:
@@ -49,13 +81,21 @@ class RunRecorder:
             print(HEADER)
 
     def record(self, name: str, us_per_call: float = 0.0,
-               spec: Optional[str] = None, **derived) -> dict:
+               spec: Optional[str] = None,
+               times_us: Optional[Sequence[float]] = None,
+               **derived) -> dict:
         """One row; ``spec`` (a serialized ``repro.api.RunSpec`` JSON
         string) rides along in the JSON record -- not the CSV -- so a
         perf row is replayable with ``python -m repro run`` from the
-        record alone."""
+        record alone.  ``times_us`` (per-trial wall-clock samples)
+        adds the noise-model fields ``n_trials`` / ``median_us_per_call``
+        / ``iqr_us_per_call`` the statistical perf gate consumes
+        (``repro.perf.gate``); rows without it stay in the legacy
+        single-number format, which every consumer tolerates."""
         row = {"name": name, "us_per_call": float(us_per_call),
                "derived": {k: v for k, v in derived.items()}}
+        if times_us is not None:
+            row.update(timing_stats(times_us))
         if spec is not None:
             row["spec"] = spec
         self.rows.append(row)

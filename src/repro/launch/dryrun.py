@@ -276,6 +276,20 @@ def run_cell(arch: str, shape_name: str, mesh_kind: str, *,
                                         mesh.size)
         rec.update(status="ok", **cost, collectives=coll, **terms,
                    memory=mem)
+        if arch.startswith("ising"):
+            # flip-cost attribution (EXPERIMENTS.md S Roofline): the
+            # analytic bytes/flip of the engine's state layout next to
+            # what the compiled HLO actually moves, plus the flips/ns
+            # the TPU roofline admits -- the honest denominator for
+            # every committed flips/ns number
+            engine = arch.split("-", 1)[1] if "-" in arch else "multispin"
+            fc = roofline.flip_cost(engine)
+            flips_per_dev = rec["spins"] * fc.replicas / mesh.size
+            rec["engine"] = engine
+            rec["model_bytes_per_flip"] = fc.bytes_per_flip
+            rec["hlo_bytes_per_flip"] = cost["bytes"] / flips_per_dev
+            rec["peak_flips_per_ns_per_device"] = \
+                roofline.roofline_flips_per_ns(engine, "tpu")
         if verbose:
             print(f"-- {arch} x {shape_name} x {mesh_kind} "
                   f"({rec['compile_s']}s)")

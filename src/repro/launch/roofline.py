@@ -1,4 +1,5 @@
-"""Roofline-term extraction from compiled dry-run artifacts.
+"""Roofline-term extraction from compiled dry-run artifacts, plus the
+Ising sweep kernels' analytic flip-cost model.
 
 Per (arch x shape x mesh):
   compute   = HLO_FLOPs  / (chips * PEAK_FLOPS)
@@ -11,15 +12,121 @@ build a name->shape table from op definitions, and sum the operand sizes of
 every all-gather / all-reduce / reduce-scatter / all-to-all /
 collective-permute.  Hardware constants: TPU v5e-class -- 197 bf16
 TFLOP/s, 819 GB/s HBM, ~50 GB/s/link ICI (task spec).
+
+The flip-cost model (:data:`ISING_FLIP_COSTS`) is the per-engine
+bytes/flip and flops/flip of one attempted Metropolis update, derived
+from each engine's actual state layout (DESIGN.md S2/S8/S9) -- the
+denominators Block et al. (arXiv 1007.3726) and Bisson et al. (arXiv
+2502.18624) anchor their multi-spin numbers against.  Every bench row
+with a flips/ns measurement divides by the matching roofline bound
+(:func:`pct_of_roofline`), so committed numbers are self-describing
+about how far from the hardware limit they ran.
 """
 from __future__ import annotations
 
 import re
-from typing import Dict
+from dataclasses import dataclass
+from typing import Dict, Optional
 
 PEAK_FLOPS = 197e12      # bf16 / chip
 HBM_BW = 819e9           # bytes/s / chip
 ICI_BW = 50e9            # bytes/s / link
+
+#: Nominal peak (flops/s, HBM bytes/s) per jax backend, used to turn a
+#: measured flips/ns into a %-of-roofline.  ``tpu`` is the v5e-class
+#: chip above; ``gpu`` is the paper's V100 (14 f32 TFLOP/s, 900 GB/s
+#: HBM2); ``cpu`` is a nominal single core of this CI container class
+#: (~100 f32 GFLOP/s peak SIMD+FMA, ~25 GB/s single-core stream BW).
+#: CPU numbers are order-of-magnitude attribution, not a measured
+#: STREAM run -- see EXPERIMENTS.md S Roofline for what a CPU
+#: pct_of_roofline does (and does not) mean.
+BACKEND_PEAKS: Dict[str, Dict[str, float]] = {
+    "tpu": {"flops": PEAK_FLOPS, "mem_bw": HBM_BW},
+    "gpu": {"flops": 14e12, "mem_bw": 900e9},
+    "cpu": {"flops": 100e9, "mem_bw": 25e9},
+}
+
+
+@dataclass(frozen=True)
+class FlipCost:
+    """Analytic cost of ONE attempted (replica-)flip for an engine.
+
+    ``bytes_per_flip`` is the HBM traffic of a half-sweep color update
+    divided by the updates it performs: read target plane + read
+    opposite plane + write target plane, at the engine's packing
+    density.  ``flops_per_flip`` counts the arithmetic of the accept
+    decision (neighbor reduction + threshold compare + Philox share).
+    ``replicas`` is how many replica-spins one lattice site carries
+    (bitplane packs 32) -- flips/ns rows for those engines already
+    count replica-flips, so the cost here is *per replica-flip*.
+    """
+
+    bytes_per_flip: float
+    flops_per_flip: float
+    replicas: int = 1
+
+
+#: Derivations (3 planes touched per half-sweep; density = bytes/site):
+#: * int8 color planes (basic/basic_philox/stencil_pallas): 1 B/site
+#:   -> 3 B/flip; ~10 ops (4 neighbor adds, couple, threshold, Philox
+#:   share) per flip.
+#: * nibble multispin: 8 spins/uint32 word = 0.5 B/site -> 1.5 B/flip;
+#:   word-parallel ops amortize to ~4/flip.
+#: * bitplane: 32 replicas/word = 0.125 B/replica-site -> 0.375
+#:   B/replica-flip; the 8-op CSA + 10-class threshold per word serves
+#:   32 replicas -> ~1.25 ops/replica-flip (DESIGN.md S8).
+#: * tensorcore: 4 int8 quarter-planes, all read + one written per
+#:   plane update -> 5 B/flip; the banded neighbor matmul does ~2*64
+#:   MACs per spin at the default block -- the paper's point that the
+#:   MXU recast is compute-wasteful.
+#: * spinglass: int8 lattice read/write + 2 quenched coupling planes
+#:   -> 5 B/flip; coupling multiplies add ~4 ops.
+ISING_FLIP_COSTS: Dict[str, FlipCost] = {
+    "basic": FlipCost(3.0, 10.0),
+    "basic_philox": FlipCost(3.0, 10.0),
+    "stencil_pallas": FlipCost(3.0, 10.0),
+    "multispin": FlipCost(1.5, 4.0),
+    "multispin_pallas": FlipCost(1.5, 4.0),
+    "bitplane": FlipCost(0.375, 1.25, replicas=32),
+    "bitplane_pallas": FlipCost(0.375, 1.25, replicas=32),
+    "tensorcore": FlipCost(5.0, 128.0),
+    "spinglass": FlipCost(5.0, 14.0),
+}
+
+
+def flip_cost(engine: str) -> FlipCost:
+    """The flip-cost model row for ``engine`` (KeyError when unmodeled,
+    e.g. ``wolff`` -- a cluster flip is not a sweep flip)."""
+    return ISING_FLIP_COSTS[engine]
+
+
+def roofline_flips_per_ns(engine: str, backend: str,
+                          k: int = 1) -> Optional[float]:
+    """Peak attempted flips/ns the backend's roofline admits.
+
+    ``min(mem_bw / bytes_per_flip, flops / flops_per_flip)``.  ``k`` is
+    the resident tier's sweeps-per-dispatch (DESIGN.md S9): a k-sweep
+    resident block crosses HBM once instead of k times, dividing
+    bytes/flip by k; the arithmetic is unchanged.  Returns None for
+    engines or backends outside the model.
+    """
+    peaks = BACKEND_PEAKS.get(backend)
+    cost = ISING_FLIP_COSTS.get(engine)
+    if peaks is None or cost is None:
+        return None
+    mem_bound = peaks["mem_bw"] / (cost.bytes_per_flip / max(k, 1))
+    compute_bound = peaks["flops"] / cost.flops_per_flip
+    return min(mem_bound, compute_bound) / 1e9
+
+
+def pct_of_roofline(flips_per_ns: float, engine: str, backend: str,
+                    k: int = 1) -> Optional[float]:
+    """Measured flips/ns as a percentage of the backend's roofline
+    bound for this engine (None outside the model)."""
+    peak = roofline_flips_per_ns(engine, backend, k=k)
+    if peak is None or peak <= 0.0:
+        return None
+    return 100.0 * flips_per_ns / peak
 
 _DTYPE_BYTES = {
     "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,

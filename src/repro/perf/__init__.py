@@ -1,0 +1,35 @@
+"""repro.perf -- the performance contract (DESIGN.md S11).
+
+Turns ``benchmarks/BENCH_*.json`` from a pile of snapshots into an
+enforced contract:
+
+* :mod:`repro.perf.schema` -- what a valid perf record looks like
+  (every ``benchmarks/run.py --json`` emission is validated before it
+  is written; the committed baselines are golden-file tested);
+* :mod:`repro.perf.gate` -- the statistical regression gate: candidate
+  vs baseline per row using the baseline's *recorded* noise band
+  (median +- noise_mult * IQR, floored) instead of a flat threshold,
+  plus absolute flips/ns floors from ``benchmarks/budgets.json``.
+
+CLI: ``python -m repro.perf.gate BASELINE CANDIDATE --budgets
+benchmarks/budgets.json`` (exit 1 on a statistically real regression;
+``--advisory`` reports without failing).
+"""
+_GATE = ("GateConfig", "GateResult", "RowVerdict", "classify", "gate",
+         "load_budgets", "make_budgets", "row_stats", "throughput",
+         "tolerance")
+_SCHEMA = ("SchemaError", "validate_record", "validate_row")
+
+__all__ = list(_GATE + _SCHEMA)
+
+
+def __getattr__(name):
+    # lazy re-exports: `python -m repro.perf.gate` must not trigger an
+    # eager package-level import of the same module (runpy warning)
+    if name in _GATE:
+        from . import gate as _g
+        return getattr(_g, name)
+    if name in _SCHEMA:
+        from . import schema as _s
+        return getattr(_s, name)
+    raise AttributeError(name)

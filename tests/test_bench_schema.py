@@ -1,0 +1,190 @@
+"""Perf-record schema (repro.perf.schema): golden-file validation of
+the committed BENCH baselines, every ``benchmarks/run.py --json``
+emission, RunRecorder output, and the violation catalogue."""
+import copy
+import glob
+import json
+import os
+import subprocess
+import sys
+
+import pytest
+
+from repro.analysis.recorder import RunRecorder, timing_stats
+from repro.api import EngineSpec, LatticeSpec, RunSpec, SweepSpec
+from repro.perf.schema import SchemaError, validate_record, validate_row
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+def _valid_row(**over):
+    row = {"name": "t1_x", "us_per_call": 10.0,
+           "derived": {"flips_per_ns": 1.5, "engine": "multispin"}}
+    row.update(over)
+    return row
+
+
+def _valid_record(rows=None):
+    return {"meta": {"stamp": "20260807_000000", "backend": "cpu",
+                     "device_count": 1},
+            "rows": rows if rows is not None else [_valid_row()]}
+
+
+# ---------------------------------------------------------------------------
+# golden files: the committed baselines are history and must stay valid
+# ---------------------------------------------------------------------------
+
+def test_committed_baselines_validate():
+    paths = sorted(glob.glob(os.path.join(REPO, "benchmarks",
+                                          "BENCH_*.json")))
+    assert len(paths) >= 2, \
+        "trend needs >= 2 committed BENCH records"
+    for path in paths:
+        with open(path) as f:
+            validate_record(json.load(f), ctx=os.path.basename(path))
+
+
+def test_newest_committed_baseline_carries_noise_model():
+    path = sorted(glob.glob(os.path.join(REPO, "benchmarks",
+                                         "BENCH_*.json")))[-1]
+    with open(path) as f:
+        rec = json.load(f)
+    timed = [r for r in rec["rows"] if r["us_per_call"] > 0]
+    with_stats = [r for r in timed if "n_trials" in r]
+    assert with_stats, f"{path}: no noise-model rows"
+    for r in with_stats:
+        if r["n_trials"] >= 2:
+            assert "iqr_us_per_call" in r
+    # roofline attribution: every timed engine row self-reports its
+    # fraction of the flip-cost-model peak
+    with_pct = [r for r in timed
+                if "pct_of_roofline" in r.get("derived", {})]
+    assert with_pct, f"{path}: no pct_of_roofline attribution"
+    for r in with_pct:
+        assert 0.0 <= r["derived"]["pct_of_roofline"] <= 100.0
+
+
+# ---------------------------------------------------------------------------
+# emission paths: RunRecorder and the run.py CLI
+# ---------------------------------------------------------------------------
+
+def test_recorder_emission_validates():
+    rec = RunRecorder(meta={"stamp": "20260807_000000",
+                            "backend": "cpu", "device_count": 1})
+    rec.record("legacy_row", 12.5, flips_per_ns=0.5)
+    rec.record("noisy_row", 10.0,
+               times_us=[9.0, 10.0, 11.0, 10.5, 9.5],
+               flips_per_ns=1.0, engine="multispin")
+    spec = RunSpec(lattice=LatticeSpec(64, 64),
+                   engine=EngineSpec("multispin"),
+                   temperature=2.27, seed=7,
+                   sweep=SweepSpec(thermalize=5, measure_every=2,
+                                   n_measure=3))
+    rec.record("spec_row", 20.0, spec=spec.to_json(),
+               times_us=[20.0], flips_per_ns=2.0)
+    validate_record({"meta": rec.meta, "rows": rec.rows})
+    noisy = rec.rows[1]
+    assert noisy["n_trials"] == 5
+    assert noisy["median_us_per_call"] == pytest.approx(10.0)
+    assert "iqr_us_per_call" in noisy
+    # single-trial rows get a median but never an IQR
+    assert rec.rows[2]["n_trials"] == 1
+    assert "iqr_us_per_call" not in rec.rows[2]
+
+
+def test_timing_stats_single_trial_has_no_iqr():
+    assert timing_stats([42.0]) == {"n_trials": 1,
+                                    "median_us_per_call": 42.0}
+    assert timing_stats([]) == {}
+    stats = timing_stats([1.0, 2.0, 3.0, 4.0])
+    assert stats["n_trials"] == 4
+    assert stats["median_us_per_call"] == pytest.approx(2.5)
+    assert stats["iqr_us_per_call"] == pytest.approx(1.5)
+
+
+@pytest.mark.slow
+def test_run_py_json_emission_validates(tmp_path):
+    """Every `run.py --json` emission passes the schema -- exercised
+    end-to-end on the cheapest bench subset."""
+    env = dict(os.environ, PYTHONPATH=os.path.join(REPO, "src"),
+               JAX_PLATFORMS="cpu")
+    subprocess.run(
+        [sys.executable, os.path.join(REPO, "benchmarks", "run.py"),
+         "--only", "kernel_block", "--trials", "2",
+         "--json", str(tmp_path)],
+        check=True, env=env, timeout=600, cwd=REPO)
+    (path,) = glob.glob(str(tmp_path / "BENCH_*.json"))
+    with open(path) as f:
+        rec = json.load(f)
+    validate_record(rec)
+    assert rec["meta"]["trials"] == 2
+    assert rec["meta"]["only"] == "kernel_block"
+    for row in rec["rows"]:
+        assert row["n_trials"] == 2
+        assert "iqr_us_per_call" in row
+
+
+# ---------------------------------------------------------------------------
+# violation catalogue
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("mutate, match", [
+    (lambda r: r.pop("name"), "name"),
+    (lambda r: r.update(name=""), "name"),
+    (lambda r: r.update(typo_key=1), "unknown row keys"),
+    (lambda r: r.pop("us_per_call"), "us_per_call"),
+    (lambda r: r.update(us_per_call=-1.0), ">= 0"),
+    (lambda r: r.update(us_per_call=float("nan")), "finite"),
+    (lambda r: r.update(us_per_call="fast"), "number"),
+    (lambda r: r.update(derived=[1, 2]), "derived must be a dict"),
+    (lambda r: r.update(derived={"flips_per_ns": -2.0}), ">= 0"),
+    (lambda r: r.update(derived={"note": None}), "str or number"),
+    (lambda r: r.update(n_trials=0, median_us_per_call=1.0), ">= 1"),
+    (lambda r: r.update(n_trials=True, median_us_per_call=1.0), "int"),
+    (lambda r: r.update(n_trials=3, median_us_per_call=1.0),
+     "requires iqr"),
+    (lambda r: r.update(n_trials=5), "median"),
+    (lambda r: r.update(n_trials=1, median_us_per_call=1.0,
+                        iqr_us_per_call=0.0), "single trial"),
+    (lambda r: r.update(median_us_per_call=1.0), "without n_trials"),
+    (lambda r: r.update(iqr_us_per_call=1.0), "without n_trials"),
+    (lambda r: r.update(spec=123), "JSON string"),
+    (lambda r: r.update(spec="not json"), "not valid JSON"),
+    (lambda r: r.update(spec="[1, 2]"), "object"),
+    (lambda r: r.update(spec='{"lattice": "nope"}'), "RunSpec"),
+])
+def test_invalid_rows_raise(mutate, match):
+    row = _valid_row()
+    mutate(row)
+    with pytest.raises(SchemaError, match=match):
+        validate_row(row)
+
+
+def test_valid_spec_row_passes():
+    spec = RunSpec(lattice=LatticeSpec(32, 32),
+                   engine=EngineSpec("basic"), temperature=2.0, seed=1,
+                   sweep=SweepSpec(thermalize=1, measure_every=1,
+                                   n_measure=1))
+    validate_row(_valid_row(spec=spec.to_json()))
+
+
+@pytest.mark.parametrize("mutate, match", [
+    (lambda r: r.pop("meta"), "meta"),
+    (lambda r: r["meta"].pop("stamp"), "stamp"),
+    (lambda r: r["meta"].pop("backend"), "backend"),
+    (lambda r: r["meta"].pop("device_count"), "device_count"),
+    (lambda r: r.update(rows=[]), "non-empty"),
+    (lambda r: r.update(rows={}), "non-empty"),
+    (lambda r: r.update(extra_top=1), "unknown top-level"),
+])
+def test_invalid_records_raise(mutate, match):
+    rec = _valid_record()
+    mutate(rec)
+    with pytest.raises(SchemaError, match=match):
+        validate_record(rec)
+
+
+def test_duplicate_row_names_raise():
+    rec = _valid_record(rows=[_valid_row(), copy.deepcopy(_valid_row())])
+    with pytest.raises(SchemaError, match="duplicate row name"):
+        validate_record(rec)

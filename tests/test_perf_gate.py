@@ -1,0 +1,325 @@
+"""repro.perf.gate: the statistical perf gate (EXPERIMENTS.md
+S Perf-gate) -- noise-band classification, legacy fallback, filtered
+runs, budgets round-trip, CLI exit codes, and the property suite
+(tolerance monotonicity, band symmetry)."""
+import json
+import os
+import sys
+
+import pytest
+
+from repro.perf.gate import (GateConfig, classify, dump_budgets, gate,
+                             load_budgets, main, make_budgets,
+                             row_stats, throughput, tolerance)
+
+sys.path.insert(0, os.path.dirname(__file__))
+from _hypothesis_compat import given, settings, st  # noqa: E402
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+# ---------------------------------------------------------------------------
+# fixtures: synthetic BENCH records in both formats
+# ---------------------------------------------------------------------------
+
+def _row(name, median, iqr=None, n=5, flips=None, legacy=False):
+    derived = {} if flips is None else {"flips_per_ns": flips}
+    if legacy:
+        return {"name": name, "us_per_call": median, "derived": derived}
+    row = {"name": name, "us_per_call": median, "derived": derived,
+           "n_trials": n, "median_us_per_call": median}
+    if n >= 2:
+        row["iqr_us_per_call"] = median * 0.02 if iqr is None else iqr
+    return row
+
+
+def _record(rows, **meta):
+    m = {"stamp": "20260807_000000", "backend": "cpu",
+         "device_count": 1, "only": "", "engines": ""}
+    m.update(meta)
+    return {"meta": m, "rows": rows}
+
+
+def _base():
+    return _record([
+        _row("t1_a", 100.0, iqr=2.0, flips=10.0),
+        _row("t1_b", 50.0, iqr=1.0, flips=4.0),
+        _row("t1_legacy", 200.0, legacy=True, flips=1.0),
+    ])
+
+
+# ---------------------------------------------------------------------------
+# gate(): classification against the noise band
+# ---------------------------------------------------------------------------
+
+def test_identical_records_pass():
+    res = gate(_base(), _base())
+    assert not res.failed
+    assert {r.status for r in res.rows} == {"ok"}
+
+
+def test_injected_regression_fails():
+    # the acceptance-criteria scenario: one row degraded 2x must fail
+    cand = _base()
+    cand["rows"][0]["us_per_call"] *= 2.0
+    cand["rows"][0]["median_us_per_call"] *= 2.0
+    res = gate(_base(), cand)
+    assert res.failed
+    (bad,) = res.by_status("regression")
+    assert bad.name == "t1_a"
+    assert bad.ratio == pytest.approx(2.0)
+    assert bad.fails
+    assert "noise band" in bad.detail
+
+
+def test_within_noise_band_is_ok():
+    # IQR 2/100 -> tol = clamp(4*0.02, 0.10, 0.75) = 0.10; +8% is noise
+    cand = _base()
+    cand["rows"][0]["median_us_per_call"] = 108.0
+    res = gate(_base(), cand)
+    assert not res.failed
+    assert res.rows[0].status == "ok"
+    assert res.rows[0].tol == pytest.approx(0.10)
+
+
+def test_improvement_flagged_but_not_failing():
+    cand = _base()
+    cand["rows"][0]["median_us_per_call"] = 50.0   # 2x faster
+    res = gate(_base(), cand)
+    assert not res.failed
+    (imp,) = res.by_status("improvement")
+    assert imp.name == "t1_a" and not imp.fails
+    # the report nudges toward a baseline refresh
+    assert "refresh the baseline" in res.to_markdown()
+
+
+def test_legacy_row_falls_back_to_flat_25pct():
+    # +20% on a spread-less baseline row passes, +30% fails
+    for pct, ok in ((1.20, True), (1.30, False)):
+        cand = _base()
+        cand["rows"][2]["us_per_call"] = 200.0 * pct
+        res = gate(_base(), cand)
+        verdict = [r for r in res.rows if r.name == "t1_legacy"][0]
+        assert verdict.tol == pytest.approx(0.25)
+        assert (verdict.status == "ok") is ok
+
+
+def test_missing_row_fails_unfiltered_run():
+    cand = _base()
+    cand["rows"] = cand["rows"][1:]       # t1_a silently dropped
+    res = gate(_base(), cand)
+    assert res.failed
+    (miss,) = res.by_status("missing")
+    assert miss.name == "t1_a"
+
+
+def test_missing_row_skipped_for_filtered_run():
+    cand = _base()
+    cand["rows"] = cand["rows"][:1]
+    cand["meta"]["only"] = "t1_a"
+    res = gate(_base(), cand)
+    assert res.filtered and not res.failed
+    assert [r.name for r in res.rows] == ["t1_a"]
+
+
+def test_spec_file_meta_counts_as_filtered():
+    cand = _base()
+    cand["rows"] = cand["rows"][:1]
+    cand["meta"]["spec_file"] = "spec.json"
+    assert not gate(_base(), cand).failed
+
+
+def test_new_row_is_advisory():
+    cand = _base()
+    cand["rows"].append(_row("t1_new_engine", 10.0, flips=99.0))
+    res = gate(_base(), cand)
+    assert not res.failed
+    (new,) = res.by_status("new")
+    assert new.name == "t1_new_engine" and not new.fails
+
+
+def test_untimed_row_is_ok():
+    base, cand = _base(), _base()
+    base["rows"].append({"name": "untimed", "us_per_call": 0.0,
+                         "derived": {}})
+    cand["rows"].append({"name": "untimed", "us_per_call": 0.0,
+                         "derived": {}})
+    res = gate(base, cand)
+    assert not res.failed
+
+
+# ---------------------------------------------------------------------------
+# budgets: absolute flips/ns floors + round-trip
+# ---------------------------------------------------------------------------
+
+def test_budget_floor_violation_fails():
+    budgets = make_budgets(_base(), safety=0.4)
+    assert budgets["rows"]["t1_a"]["min_flips_per_ns"] == pytest.approx(
+        4.0)
+    cand = _base()
+    cand["rows"][0]["derived"]["flips_per_ns"] = 3.0   # below 0.4 * 10
+    # keep the timing in-band so only the budget trips
+    res = gate(_base(), cand, budgets=budgets)
+    assert res.failed
+    (bud,) = res.by_status("budget")
+    assert bud.name == "t1_a" and "below budget floor" in bud.detail
+
+
+def test_budget_row_without_metric_fails():
+    budgets = {"rows": {"t1_a": {"min_flips_per_ns": 1.0}}}
+    cand = _base()
+    del cand["rows"][0]["derived"]["flips_per_ns"]
+    res = gate(_base(), cand, budgets=budgets)
+    assert res.by_status("budget")
+
+
+def test_budgets_dump_load_round_trip(tmp_path):
+    budgets = make_budgets(_base(), safety=0.5)
+    path = dump_budgets(budgets, str(tmp_path / "budgets.json"))
+    assert load_budgets(path) == budgets
+
+
+def test_load_budgets_rejects_unknown_keys(tmp_path):
+    path = tmp_path / "bad.json"
+    path.write_text(json.dumps({"rows": {}, "typo": 1}))
+    with pytest.raises(ValueError, match="unknown keys"):
+        load_budgets(str(path))
+
+
+def test_gate_config_from_dict_rejects_unknown_keys():
+    with pytest.raises(ValueError, match="unknown gate config"):
+        GateConfig.from_dict({"noise_mult": 3.0, "nose_mult": 1.0})
+
+
+def test_gate_config_comes_from_budgets():
+    budgets = {"gate": {"noise_mult": 100.0, "rel_cap": 5.0}, "rows": {}}
+    cand = _base()
+    cand["rows"][0]["median_us_per_call"] = 300.0   # 3x slower
+    assert gate(_base(), cand).failed                # default config
+    assert not gate(_base(), cand, budgets=budgets).failed  # huge band
+
+
+# ---------------------------------------------------------------------------
+# the committed baseline gates cleanly against itself
+# ---------------------------------------------------------------------------
+
+def test_committed_baseline_self_gate_passes():
+    import glob
+    paths = sorted(glob.glob(os.path.join(REPO, "benchmarks",
+                                          "BENCH_*.json")))
+    assert paths, "no committed baseline"
+    with open(paths[-1]) as f:
+        baseline = json.load(f)
+    budgets = load_budgets(os.path.join(REPO, "benchmarks",
+                                        "budgets.json"))
+    res = gate(baseline, baseline, budgets=budgets)
+    assert not res.failed, res.to_markdown()
+
+
+# ---------------------------------------------------------------------------
+# CLI
+# ---------------------------------------------------------------------------
+
+def _write(tmp_path, name, record):
+    p = tmp_path / name
+    p.write_text(json.dumps(record))
+    return str(p)
+
+
+def test_cli_pass_and_fail_exit_codes(tmp_path, capsys):
+    base = _write(tmp_path, "base.json", _base())
+    good = _write(tmp_path, "good.json", _base())
+    bad_rec = _base()
+    bad_rec["rows"][0]["median_us_per_call"] *= 3.0
+    bad = _write(tmp_path, "bad.json", bad_rec)
+    assert main([base, good]) == 0
+    assert "**PASS**" in capsys.readouterr().out
+    assert main([base, bad]) == 1
+    assert "**FAIL**" in capsys.readouterr().out
+
+
+def test_cli_advisory_reports_but_exits_zero(tmp_path, capsys):
+    base = _write(tmp_path, "base.json", _base())
+    bad_rec = _base()
+    bad_rec["rows"][0]["median_us_per_call"] *= 3.0
+    bad = _write(tmp_path, "bad.json", bad_rec)
+    out_md = str(tmp_path / "gate.md")
+    assert main([base, bad, "--advisory", "--out", out_md]) == 0
+    assert "advisory mode" in capsys.readouterr().out
+    assert "**FAIL**" in open(out_md).read()
+
+
+def test_cli_init_budgets(tmp_path):
+    base = _write(tmp_path, "base.json", _base())
+    out = str(tmp_path / "budgets.json")
+    assert main(["--init-budgets", out, base, "--safety", "0.5"]) == 0
+    budgets = load_budgets(out)
+    assert budgets["rows"]["t1_b"]["min_flips_per_ns"] == pytest.approx(
+        2.0)
+    assert budgets["gate"]["legacy_rel_tol"] == pytest.approx(0.25)
+
+
+# ---------------------------------------------------------------------------
+# helpers: row_stats / throughput
+# ---------------------------------------------------------------------------
+
+def test_row_stats_both_formats():
+    assert row_stats(_row("x", 10.0, iqr=1.0)) == (10.0, 1.0, 5)
+    assert row_stats(_row("x", 10.0, legacy=True)) == (10.0, None, 1)
+    # single-trial noise-model row: median, no IQR
+    assert row_stats(_row("x", 10.0, n=1)) == (10.0, None, 1)
+
+
+def test_throughput_prefers_replica_metric():
+    row = {"name": "x", "us_per_call": 1.0,
+           "derived": {"flips_per_ns": 2.0,
+                       "replica_flips_per_ns": 64.0}}
+    assert throughput(row) == ("replica_flips_per_ns", 64.0)
+    assert throughput({"name": "x", "us_per_call": 1.0,
+                       "derived": {}}) == (None, None)
+
+
+# ---------------------------------------------------------------------------
+# properties (hypothesis when installed, seeded fallback otherwise)
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=60)
+@given(rel=st.floats(min_value=0.0, max_value=2.0),
+       floor=st.floats(min_value=0.01, max_value=0.5))
+def test_tolerance_monotone_and_clamped(rel, floor):
+    cfg = GateConfig(noise_mult=4.0, rel_floor=floor, rel_cap=0.75)
+    base = _row("x", 100.0, iqr=100.0 * rel)
+    tol = tolerance(base, cfg)
+    assert floor <= tol <= max(0.75, floor)
+    # monotone in the relative spread
+    wider = tolerance(_row("x", 100.0, iqr=100.0 * (rel + 0.1)), cfg)
+    assert wider >= tol
+
+
+@settings(max_examples=60)
+@given(ratio=st.floats(min_value=0.05, max_value=20.0),
+       tol=st.floats(min_value=0.01, max_value=0.75))
+def test_classify_band_is_multiplicatively_symmetric(ratio, tol):
+    a, b = classify(ratio, tol), classify(1.0 / ratio, tol)
+    flip = {"regression": "improvement", "improvement": "regression",
+            "ok": "ok"}
+    assert b == flip[a]
+
+
+@settings(max_examples=40)
+@given(median=st.floats(min_value=1.0, max_value=1e6),
+       n=st.integers(min_value=2, max_value=50),
+       safety=st.floats(min_value=0.1, max_value=0.9))
+def test_make_budgets_round_trips_and_floors_below_measured(
+        median, n, safety):
+    import tempfile
+    flips = 1e3 / median
+    base = _record([_row("t1_p", median, n=n, flips=flips)])
+    budgets = make_budgets(base, safety=safety)
+    floor = budgets["rows"]["t1_p"]["min_flips_per_ns"]
+    assert floor <= flips            # the floor never exceeds measured
+    with tempfile.TemporaryDirectory() as tmp:
+        path = dump_budgets(budgets, os.path.join(tmp, "b.json"))
+        assert load_budgets(path) == budgets
+    # the baseline itself always passes its own budgets
+    assert not gate(base, base, budgets=budgets).failed

@@ -1,0 +1,219 @@
+"""benchmarks/report.py: diff logic (Δ%, added/removed, filtered-run
+skip, the >25% warn path), the trend timeline + CSV artifact, and the
+dryrun render with the rewired per-engine flip-cost model."""
+import json
+import os
+import sys
+
+import pytest
+
+sys.path.insert(0, os.path.dirname(os.path.dirname(
+    os.path.abspath(__file__))))
+from benchmarks import report  # noqa: E402
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+def _row(name, us, flips=None, median=None, iqr=None, n=5):
+    r = {"name": name, "us_per_call": us, "derived": {}}
+    if flips is not None:
+        r["derived"] = {"flips_per_ns": flips, "engine": "multispin"}
+    if median is not None:
+        r["n_trials"] = n
+        r["median_us_per_call"] = median
+        if n >= 2:
+            r["iqr_us_per_call"] = 0.1 * median if iqr is None else iqr
+    return r
+
+
+def _record(rows, stamp="20260807_000001", **meta):
+    m = {"stamp": stamp, "backend": "cpu", "device_count": 1,
+         "only": "", "engines": ""}
+    m.update(meta)
+    return {"meta": m, "rows": rows}
+
+
+def _write(tmp_path, name, rec):
+    p = tmp_path / name
+    p.write_text(json.dumps(rec))
+    return str(p)
+
+
+# ---------------------------------------------------------------------------
+# diff
+# ---------------------------------------------------------------------------
+
+def test_diff_pct_math_and_rows(tmp_path, capsys):
+    old = _write(tmp_path, "old.json", _record([
+        _row("a", 100.0, flips=1.0), _row("b", 50.0)]))
+    new = _write(tmp_path, "new.json", _record([
+        _row("a", 110.0, flips=0.9), _row("b", 50.0)],
+        stamp="20260807_000002"))
+    out = report.diff(old, new)
+    txt = capsys.readouterr().out
+    by_name = {r["name"]: r for r in out["rows"]}
+    assert by_name["a"]["pct"] == pytest.approx(10.0)
+    assert by_name["b"]["pct"] == pytest.approx(0.0)
+    assert out["warnings"] == []          # +10% is under the 25% warn
+    assert "| a | 100.0 | 110.0 | +10.0% | 1.0 | 0.9 |" in txt
+
+
+def test_diff_warns_past_threshold(tmp_path, capsys):
+    old = _write(tmp_path, "old.json", _record([_row("a", 100.0)]))
+    new = _write(tmp_path, "new.json", _record([_row("a", 130.0)]))
+    out = report.diff(old, new)
+    assert out["warnings"] == ["a"]
+    assert "# WARNING: a more than 25% slower" in capsys.readouterr().out
+    # custom threshold: +30% under a 40% bar is clean
+    assert report.diff(old, new, warn_threshold=0.4)["warnings"] == []
+
+
+def test_diff_added_and_removed_markers(tmp_path, capsys):
+    old = _write(tmp_path, "old.json", _record([_row("gone", 10.0)]))
+    new = _write(tmp_path, "new.json", _record([_row("born", 20.0)]))
+    out = report.diff(old, new)
+    status = {r["name"]: r["status"] for r in out["rows"]}
+    assert status == {"gone": "removed", "born": "added"}
+    txt = capsys.readouterr().out
+    assert "| gone (removed) |" in txt and "| born (added) |" in txt
+
+
+def test_diff_filtered_run_skips_unselected_baseline_rows(tmp_path,
+                                                          capsys):
+    old = _write(tmp_path, "old.json", _record([
+        _row("a", 10.0), _row("unselected", 99.0)]))
+    new = _write(tmp_path, "new.json", _record([_row("a", 10.0)],
+                                               only="a"))
+    out = report.diff(old, new)
+    assert [r["name"] for r in out["rows"]] == ["a"]
+    assert "filtered run" in capsys.readouterr().out
+
+
+def test_diff_uses_median_for_noise_model_rows(tmp_path, capsys):
+    # mixed formats: old legacy mean vs new recorded median
+    old = _write(tmp_path, "old.json", _record([_row("a", 100.0)]))
+    new = _write(tmp_path, "new.json", _record([
+        _row("a", 300.0, median=100.0)]))   # mean is an outlier; median flat
+    out = report.diff(old, new)
+    assert out["rows"][0]["pct"] == pytest.approx(0.0)
+    assert out["warnings"] == []
+    capsys.readouterr()
+
+
+# ---------------------------------------------------------------------------
+# trend
+# ---------------------------------------------------------------------------
+
+def _two_stamps(tmp_path):
+    _write(tmp_path, "BENCH_20260101_000000.json", _record([
+        _row("t1_x", 100.0, flips=1.0, median=100.0),
+        _row("untimed", 0.0)],                      # no metric: excluded
+        stamp="20260101_000000"))
+    # written out of stamp order on purpose -- trend must sort by stamp
+    _write(tmp_path, "BENCH_20260301_000000.json", _record([
+        _row("t1_x", 50.0, flips=2.0, median=50.0)],
+        stamp="20260301_000000"))
+    return str(tmp_path)
+
+
+def test_trend_timeline_and_delta(tmp_path, capsys):
+    out = report.trend(paths=(_two_stamps(tmp_path),))
+    txt = capsys.readouterr().out
+    assert out["stamps"] == ["20260101_000000", "20260301_000000"]
+    assert out["series"]["t1_x"] == {"20260101_000000": 1.0,
+                                     "20260301_000000": 2.0}
+    assert "untimed" not in out["series"]
+    assert "| multispin | t1_x | 1.0000 | 2.0000 | +100.0% |" in txt
+
+
+def test_trend_writes_csv_artifact(tmp_path, capsys):
+    d = _two_stamps(tmp_path)
+    csv_path = str(tmp_path / "artifact" / "trend.csv")
+    report.trend(paths=(d,), csv_path=csv_path)
+    capsys.readouterr()
+    lines = open(csv_path).read().strip().split("\n")
+    assert lines[0].startswith("stamp,backend,name,engine,metric,")
+    assert len(lines) == 3                 # header + 2 timed points
+    assert lines[1].split(",")[:5] == [
+        "20260101_000000", "cpu", "t1_x", "multispin", "flips_per_ns"]
+
+
+def test_trend_dedupes_repeated_paths(tmp_path, capsys):
+    d = _two_stamps(tmp_path)
+    out = report.trend(paths=(d, d))
+    capsys.readouterr()
+    assert len(out["stamps"]) == 2
+
+
+def test_trend_single_record_prints_hint(tmp_path, capsys):
+    _write(tmp_path, "BENCH_20260101_000000.json",
+           _record([_row("t1_x", 100.0, flips=1.0)],
+                   stamp="20260101_000000"))
+    report.trend(paths=(str(tmp_path),))
+    assert "commit or generate more" in capsys.readouterr().out
+
+
+def test_trend_over_committed_history(capsys):
+    """The acceptance criterion: `report trend` renders a timeline over
+    the >= 2 committed BENCH records."""
+    out = report.trend(paths=(os.path.join(REPO, "benchmarks"),))
+    txt = capsys.readouterr().out
+    assert len(out["stamps"]) >= 2
+    assert out["series"], "no throughput series in committed history"
+    assert "### Bench trend" in txt
+
+
+def test_cli_trend_spelling(tmp_path, capsys):
+    d = _two_stamps(tmp_path)
+    assert report.cli(["trend", d]) == 0
+    assert "Bench trend" in capsys.readouterr().out
+    assert report.cli(["--trend", d]) == 0
+    assert "Bench trend" in capsys.readouterr().out
+
+
+def test_cli_diff_spelling(tmp_path, capsys):
+    old = _write(tmp_path, "old.json", _record([_row("a", 10.0)]))
+    new = _write(tmp_path, "new.json", _record([_row("a", 11.0)]))
+    assert report.cli(["diff", old, new]) == 0
+    assert "Bench diff" in capsys.readouterr().out
+
+
+# ---------------------------------------------------------------------------
+# dryrun render: the rewired ising flip-cost model
+# ---------------------------------------------------------------------------
+
+def test_model_flops_ratio_uses_engine_flip_cost():
+    from repro.launch.roofline import flip_cost
+    spins = 1 << 20
+    flops = 5.0e7
+    r = {"arch": "ising-multispin", "shape": "x", "mesh": "1x1",
+         "chips": 1, "spins": spins, "flops": flops}
+    expect = (flip_cost("multispin").flops_per_flip * spins) / flops
+    assert report._model_flops_ratio(r) == pytest.approx(expect)
+    # bitplane carries 32 replicas per word -> 32x the useful work
+    r["arch"] = "ising-bitplane"
+    got = report._model_flops_ratio(r)
+    assert got == pytest.approx(
+        flip_cost("bitplane").flops_per_flip * 32 * spins / flops)
+
+
+def test_main_renders_ising_cell(tmp_path, capsys):
+    cells = [{"arch": "ising-multispin", "shape": "n4096", "mesh": "1x1",
+              "status": "ok", "chips": 1, "spins": 4096 * 4096,
+              "compile_s": 1.0, "flops": 1e9, "bytes": 1e8,
+              "coll_bytes": 0, "memory": {"temp_size_in_bytes": 0},
+              "t_compute_s": 0.1, "t_memory_s": 0.2,
+              "t_collective_s": 0.0, "dominant": "memory"},
+             {"arch": "ising-multispin", "shape": "n8192", "mesh": "1x1",
+              "status": "skipped", "skip_reason": "too big"}]
+    path = tmp_path / "dryrun.json"
+    path.write_text(json.dumps(cells))
+    report.main(str(path))
+    txt = capsys.readouterr().out
+    assert "### Dry-run status" in txt and "### Roofline terms" in txt
+    assert "SKIP: too big" in txt
+    assert "**memory**" in txt
+    # MODEL/HLO column rendered as a number, not the "-" fallback
+    from repro.launch.roofline import flip_cost
+    expect = flip_cost("multispin").flops_per_flip * 4096 * 4096 / 1e9
+    assert f"{expect:.3f}" in txt
