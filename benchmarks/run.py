@@ -15,6 +15,7 @@ paper-comparable numbers.  The roofline table (from the dry-run artifacts)
 is the hardware-independent performance evidence -- see EXPERIMENTS.md.
 """
 import argparse
+import collections
 import json
 import time
 
@@ -22,24 +23,44 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+import repro.telemetry as tel
 
 # set by --trials: overrides every bench's iter count so each row gets
 # an n_trials-deep timing sample (median + IQR -- the noise model the
 # perf gate needs; EXPERIMENTS.md S Perf-gate)
 _TRIALS = None
 
+#: one timing measurement: steady-state mean/samples, the separately
+#: timed first warmup call (compile + run -- so first-dispatch cost
+#: never contaminates single-trial medians), and the MEASURED dispatch
+#: count per timed call (telemetry counter delta; 0.0 for benches that
+#: bypass the instrumented engine/session wrappers, e.g. raw kernels)
+Timed = collections.namedtuple(
+    "Timed", ["mean_s", "out", "times_s", "compile_s", "dispatches"])
 
-def _timeit(fn, *args, iters=3, warmup=1):
-    """Returns (mean_seconds, last_out, per_trial_seconds)."""
+
+def _timeit(fn, *args, iters=3, warmup=1, label=None):
+    """Time ``fn(*args)`` -> :class:`Timed` (device-complete walls)."""
     iters = _TRIALS or iters
-    for _ in range(warmup):
-        jax.block_until_ready(fn(*args))
+    compile_s = None
+    for i in range(warmup):
+        # first call pays XLA compilation: timed apart under its own span
+        with tel.span("bench.warmup", label=label, first=i == 0):
+            t0 = time.perf_counter()
+            jax.block_until_ready(fn(*args))
+            dt = time.perf_counter() - t0
+        if i == 0:
+            compile_s = dt
     times = []
+    d0 = tel.DISPATCHES.value  # warmup dispatches excluded
     for _ in range(iters):
-        t0 = time.perf_counter()
-        out = jax.block_until_ready(fn(*args))
-        times.append(time.perf_counter() - t0)
-    return sum(times) / len(times), out, times
+        with tel.span("bench.trial", label=label):
+            t0 = time.perf_counter()
+            out = jax.block_until_ready(fn(*args))
+            times.append(time.perf_counter() - t0)
+    dispatches = (tel.DISPATCHES.value - d0) / iters
+    return Timed(sum(times) / len(times), out, times, compile_s,
+                 dispatches)
 
 
 # set in main(): a repro.analysis.RunRecorder; rows accumulate so --json
@@ -47,16 +68,25 @@ def _timeit(fn, *args, iters=3, warmup=1):
 _RECORDER = None
 
 
-def _row(name, us, derived, engine=None, k=1, times=None):
+def _row(name, us, derived, engine=None, k=1, times=None, timed=None):
     """One bench row.  ``engine`` attributes the row to a registry
     engine: the flips/ns measurement gains ``pct_of_roofline`` for the
     backend it ran on (``launch/roofline.py`` flip-cost model) and an
     ``engine=`` tag the trend report groups by.  ``k`` is the resident
     tier's sweeps/dispatch (divides the model's HBM bytes/flip).
-    ``times`` (per-trial seconds from ``_timeit``) adds the noise-model
-    fields; single-shot rows stay in the legacy format."""
+    ``timed`` (a :class:`Timed`) adds the noise-model fields plus the
+    compile/steady split (``compile_ms``) and the MEASURED per-call
+    dispatch count (omitted when 0: the bench bypassed the
+    instrumented wrappers, so no honest count exists); single-shot
+    rows stay in the legacy format."""
     from repro.analysis.recorder import parse_derived
     d = parse_derived(derived)
+    if timed is not None:
+        times = timed.times_s
+        if timed.compile_s is not None:
+            d["compile_ms"] = round(timed.compile_s * 1e3, 3)
+        if timed.dispatches:
+            d["dispatches"] = timed.dispatches
     if engine is not None:
         from repro.launch import roofline as rl
         d["engine"] = engine
@@ -121,11 +151,13 @@ def table1_single_device(n=256, sweeps=10):
                         tc_block=64)
         eng = make_engine(cfg)
         state = eng.init_state(jax.random.PRNGKey(0))
-        dt, _, ts = _timeit(_sweep_stepper(eng, state, sweeps))
+        t = _timeit(_sweep_stepper(eng, state, sweeps),
+                    label=f"t1_{name}")
+        dt = t.mean_s
         reps = ENGINES[name].replicas
         _row(f"t1_{name}", dt * 1e6,
              f"flips_per_ns={reps*spins/dt/1e9:.4f}",
-             engine=name, times=ts)
+             engine=name, timed=t)
 
 
 # ---------------------------------------------------------------------------
@@ -142,10 +174,11 @@ def table2_multispin_sizes(sweeps=5):
         step = _rebind_stepper(
             lambda s: ms.run_sweeps_packed(*s, beta, sweeps, seed=1),
             ms.pack_lattice(*lat.split_checkerboard(full)))
-        dt, _, ts = _timeit(step, iters=2)
+        t = _timeit(step, iters=2, label=f"t2_multispin_{n}x{n}")
+        dt = t.mean_s
         _row(f"t2_multispin_{n}x{n}", dt * 1e6,
              f"flips_per_ns={n*n*sweeps/dt/1e9:.4f}",
-             engine="multispin", times=ts)
+             engine="multispin", timed=t)
 
 
 def table2_ensemble_batch(sweeps=5, batch=8):
@@ -155,10 +188,12 @@ def table2_ensemble_batch(sweeps=5, batch=8):
     for n in (128, 256):
         ens = Ensemble(n=n, m=n, temperatures=[1.5] * batch,
                        seeds=list(range(batch)), engine="multispin")
-        dt, _, ts = _timeit(lambda: ens.run(sweeps), iters=2)
+        t = _timeit(lambda: ens.run(sweeps), iters=2,
+                    label=f"t2_ensemble_B{batch}_{n}")
+        dt = t.mean_s
         _row(f"t2_ensemble_B{batch}_multispin_{n}x{n}", dt * 1e6,
              f"flips_per_ns={batch*n*n*sweeps/dt/1e9:.4f}",
-             engine="multispin", times=ts)
+             engine="multispin", timed=t)
 
 
 # ---------------------------------------------------------------------------
@@ -184,10 +219,11 @@ def table3_weak_scaling(per_dev_rows=256, cols=512, sweeps=5):
         tick = _rebind_stepper(
             lambda s: step(*s, beta, jnp.uint32(0)),
             (jax.device_put(b, sh), jax.device_put(w, sh)))
-        dt, _, ts = _timeit(tick, iters=2)
+        t = _timeit(tick, iters=2, label=f"t3_weak_{nd}dev")
+        dt = t.mean_s
         _row(f"t3_weak_basic_{nd}dev", dt * 1e6,
              f"flips_per_ns={n*cols*sweeps/dt/1e9:.4f}",
-             engine="basic", times=ts)
+             engine="basic", timed=t)
 
 
 def table4_strong_scaling(n=1024, cols=512, sweeps=5):
@@ -205,10 +241,11 @@ def table4_strong_scaling(n=1024, cols=512, sweeps=5):
         tick = _rebind_stepper(
             lambda s: step(*s, beta, jnp.uint32(0)),
             (jax.device_put(b.copy(), sh), jax.device_put(w.copy(), sh)))
-        dt, _, ts = _timeit(tick, iters=2)
+        t = _timeit(tick, iters=2, label=f"t4_strong_{nd}dev")
+        dt = t.mean_s
         _row(f"t4_strong_basic_{nd}dev", dt * 1e6,
              f"flips_per_ns={n*cols*sweeps/dt/1e9:.4f}",
-             engine="basic", times=ts)
+             engine="basic", timed=t)
 
 
 def table5_packed_scaling(per_dev_rows=256, cols=1024, sweeps=5):
@@ -228,10 +265,11 @@ def table5_packed_scaling(per_dev_rows=256, cols=1024, sweeps=5):
         tick = _rebind_stepper(
             lambda s: step(*s, beta, jnp.uint32(0)),
             (jax.device_put(bw, sh), jax.device_put(ww, sh)))
-        dt, _, ts = _timeit(tick, iters=2)
+        t = _timeit(tick, iters=2, label=f"t5_weak_{nd}dev")
+        dt = t.mean_s
         _row(f"t5_weak_multispin_{nd}dev", dt * 1e6,
              f"flips_per_ns={n*cols*sweeps/dt/1e9:.4f}",
-             engine="multispin", times=ts)
+             engine="multispin", timed=t)
 
 
 # ---------------------------------------------------------------------------
@@ -240,7 +278,10 @@ def table5_packed_scaling(per_dev_rows=256, cols=1024, sweeps=5):
 # ---------------------------------------------------------------------------
 
 def table1_measure_fusion(n=64, n_measure=64, sweeps_between=1):
-    from repro.analysis import measure as msr
+    """Fused measure_scan vs the legacy per-sample loop.  Both rows'
+    ``dispatches`` columns are MEASURED (telemetry counter delta inside
+    ``_timeit``), not asserted: the fused row must stay at 1 per
+    measure block (CI gates on it), the legacy row at ``n_measure``."""
     from repro.analysis.measure import MeasurementPlan
     from repro.core.sim import SimConfig, Simulation
 
@@ -258,21 +299,20 @@ def table1_measure_fusion(n=64, n_measure=64, sweeps_between=1):
             out[i] = sim.magnetization()
         return out
 
-    dt, _, ts = _timeit(legacy_loop, iters=2)
+    t = _timeit(legacy_loop, iters=2, label=f"t1_traj_loop_{n}")
+    dt = t.mean_s
     _row(f"t1_traj_loop_multispin_{n}", dt * 1e6,
-         f"dispatches={n_measure};us_per_sample={dt*1e6/n_measure:.1f};"
-         f"flips_per_ns={spins/dt/1e9:.4f}", engine="multispin", times=ts)
+         f"us_per_sample={dt*1e6/n_measure:.1f};"
+         f"flips_per_ns={spins/dt/1e9:.4f}", engine="multispin", timed=t)
 
     sim2 = Simulation(SimConfig(**cfg))
     plan = MeasurementPlan(n_measure, sweeps_between, fields=("m",))
-    before = msr.DISPATCH_COUNT
-    dt, _, ts = _timeit(lambda: sim2.measure(plan)["m"], iters=2)
-    iters_run = len(ts) + 1  # warmup + timed iters
-    dispatches = (msr.DISPATCH_COUNT - before) / iters_run
+    t = _timeit(lambda: sim2.measure(plan)["m"], iters=2,
+                label=f"t1_traj_scan_{n}")
+    dt = t.mean_s
     _row(f"t1_traj_scan_multispin_{n}", dt * 1e6,
-         f"dispatches={dispatches:.0f};"
          f"us_per_sample={dt*1e6/n_measure:.1f};"
-         f"flips_per_ns={spins/dt/1e9:.4f}", engine="multispin", times=ts)
+         f"flips_per_ns={spins/dt/1e9:.4f}", engine="multispin", timed=t)
 
 
 # ---------------------------------------------------------------------------
@@ -297,13 +337,15 @@ def table1_bitplane(n=256, sweeps=10, pallas_n=64, pallas_sweeps=2):
         cfg = SimConfig(n=n, m=n, temperature=2.27, seed=1, engine=name)
         eng = make_engine(cfg)
         state = eng.init_state(jax.random.PRNGKey(0))
-        dt, _, ts = _timeit(_sweep_stepper(eng, state, sweeps))
+        t = _timeit(_sweep_stepper(eng, state, sweeps),
+                    label=f"t1_bitplane_{name}")
+        dt = t.mean_s
         reps = ENGINES[name].replicas
         flips = reps * n * n * sweeps
         _row(f"t1_bitplane_{name}_{n}", dt * 1e6,
              f"replica_flips_per_ns={flips/dt/1e9:.4f};"
              f"philox_draws_per_spin={1.0/reps:.5f}",
-             engine=name, times=ts)
+             engine=name, timed=t)
 
     # interpret-mode Pallas smoke (CI artifact row): small lattice, the
     # interpreter is orders of magnitude off real-kernel throughput
@@ -312,13 +354,14 @@ def table1_bitplane(n=256, sweeps=10, pallas_n=64, pallas_sweeps=2):
                         engine="bitplane_pallas")
         eng = make_engine(cfg)
         state = eng.init_state(jax.random.PRNGKey(0))
-        dt, _, ts = _timeit(_sweep_stepper(eng, state, pallas_sweeps),
-                            iters=1, warmup=1)
+        t = _timeit(_sweep_stepper(eng, state, pallas_sweeps),
+                    iters=1, warmup=1, label="t1_bitplane_pallas")
+        dt = t.mean_s
         flips = eng.replicas * pallas_n * pallas_n * pallas_sweeps
         _row(f"t1_bitplane_pallas_interp_{pallas_n}", dt * 1e6,
              f"replica_flips_per_ns={flips/dt/1e9:.4f};"
              f"philox_draws_per_spin={1.0/eng.replicas:.5f}",
-             engine="bitplane_pallas", times=ts)
+             engine="bitplane_pallas", timed=t)
 
 
 # ---------------------------------------------------------------------------
@@ -348,13 +391,15 @@ def table1_resident(n=64, k=8):
         eng = make_engine(cfg)
         assert eng.resident_plan is not None, (name, n)
         state = eng.init_state(jax.random.PRNGKey(0))
-        dt_res, _, ts_res = _timeit(_sweep_stepper(eng, state, k),
-                                    iters=2)
+        t_res = _timeit(_sweep_stepper(eng, state, k), iters=2,
+                        label=f"t1_resident_{name}")
+        dt_res = t_res.mean_s
 
         fb = make_engine(cfg)
         fb.resident_plan = None   # force the per-half-sweep tier
         state = fb.init_state(jax.random.PRNGKey(0))
-        dt_half, _, _ = _timeit(_sweep_stepper(fb, state, k), iters=2)
+        dt_half = _timeit(_sweep_stepper(fb, state, k), iters=2,
+                          label=f"t1_halfsweep_{name}").mean_s
 
         _row(f"t1_resident_{name}_{n}_k{k}", dt_res * 1e6,
              f"k_sweeps_per_dispatch={k};kernel_dispatches_per_block=1;"
@@ -362,7 +407,7 @@ def table1_resident(n=64, k=8):
              f"flips_per_ns={flips / dt_res / 1e9:.4f};"
              f"halfsweep_flips_per_ns={flips / dt_half / 1e9:.4f};"
              f"speedup_vs_halfsweep={dt_half / dt_res:.2f}",
-             engine=name, k=k, times=ts_res)
+             engine=name, k=k, timed=t_res)
 
 
 # ---------------------------------------------------------------------------
@@ -388,11 +433,14 @@ def spec_bench(path, sweeps=10):
     session = Session.open(spec)
     if spec.sweep is not None:
         total = spec.sweep.total_sweeps
-        dt, _, ts = _timeit(lambda: session.measure(), iters=2)
+        t = _timeit(lambda: session.measure(), iters=2,
+                    label="spec_measure")
         kind, flips = "measure", reps * batch * n * m * total
     else:
-        dt, _, ts = _timeit(lambda: session.run(sweeps), iters=2)
+        t = _timeit(lambda: session.run(sweeps), iters=2,
+                    label="spec_run")
         kind, flips = "run", reps * batch * n * m * sweeps
+    dt = t.mean_s
     name = f"spec_{kind}_{spec.engine.name}_{spec.mode}_{n}x{m}"
     if _RECORDER is None:
         print(f"{name},{dt * 1e6:.1f},flips_per_ns={flips/dt/1e9:.4f}")
@@ -401,8 +449,12 @@ def spec_bench(path, sweeps=10):
     pct = rl.pct_of_roofline(flips / dt / 1e9, spec.engine.name,
                              jax.default_backend())
     extra = {} if pct is None else {"pct_of_roofline": round(pct, 4)}
+    if t.compile_s is not None:
+        extra["compile_ms"] = round(t.compile_s * 1e3, 3)
+    if t.dispatches:
+        extra["dispatches"] = t.dispatches
     _RECORDER.record(name, dt * 1e6, spec=spec.to_json(),
-                     times_us=[t * 1e6 for t in ts],
+                     times_us=[s * 1e6 for s in t.times_s],
                      flips_per_ns=flips / dt / 1e9, batch=batch,
                      engine=spec.engine.name, **extra)
 
@@ -463,11 +515,13 @@ def kernel_block_sweep(n=128, sweeps=3):
     for block_rows in (8, 16, 32, 64, 128):
         vmem_kb = 4 * block_rows * width_words * 4 / 1024
         # copies: the wrapper donates and bw/ww are reused per block size
-        dt, _, ts = _timeit(lambda: run_sweeps_multispin(
+        t = _timeit(lambda: run_sweeps_multispin(
             bw.copy(), ww.copy(), beta, sweeps, seed=1,
-            block_rows=block_rows, interpret=True), iters=1, warmup=1)
+            block_rows=block_rows, interpret=True), iters=1, warmup=1,
+            label=f"kblocks_rows{block_rows}")
+        dt = t.mean_s
         _row(f"kblocks_multispin_rows{block_rows}", dt * 1e6,
-             f"vmem_working_set_kb={vmem_kb:.0f}", times=ts)
+             f"vmem_working_set_kb={vmem_kb:.0f}", timed=t)
 
 
 def main() -> None:
@@ -494,7 +548,13 @@ def main() -> None:
                     help="benchmark the run this RunSpec file describes "
                          "(recorded with the serialized spec; runs "
                          "alone unless --only also selects benches)")
+    ap.add_argument("--trace", default="", metavar="PATH",
+                    help="enable span tracing; write the Chrome trace "
+                         "(.json) or .jsonl stream + metrics snapshot "
+                         "here after the benches run")
     args, _ = ap.parse_known_args()
+    if args.trace:
+        tel.enable()
     _ENGINE_FILTER = tuple(e for e in args.engines.split(",") if e)
     _TRIALS = args.trials
     if _TRIALS is not None and _TRIALS < 1:
@@ -538,6 +598,9 @@ def main() -> None:
         validate_record({"meta": _RECORDER.meta, "rows": _RECORDER.rows})
         path = _RECORDER.write_json(args.json)
         print(f"# wrote {path}")
+    if args.trace:
+        print(f"# wrote trace "
+              f"{tel.export(args.trace, meta={'stamp': stamp, 'bench': True, 'only': args.only})}")
 
 
 if __name__ == "__main__":

@@ -78,9 +78,26 @@ def _summarize(traj: dict) -> dict:
     return out
 
 
+def _finish_trace(args, spec) -> None:
+    if not args.trace:
+        return
+    import repro.telemetry as tel
+    path = tel.export(args.trace,
+                      meta={"engine": spec.engine.name,
+                            "mode": spec.mode,
+                            "lattice": [spec.lattice.n, spec.lattice.m],
+                            "spec_json": spec.to_json()})
+    print(f"# wrote trace {path} "
+          f"(inspect: python -m repro.telemetry summarize {path})",
+          file=sys.stderr)
+
+
 def cmd_run(args) -> int:
     from repro.api import Session, describe
 
+    if args.trace:
+        import repro.telemetry as tel
+        tel.enable()
     session = None
     if args.restore and not args.dry_run:
         session = Session.restore(args.restore)  # ONE checkpoint read
@@ -103,6 +120,7 @@ def cmd_run(args) -> int:
               f"engine={plan['engine']} "
               f"lattice={plan['lattice'][0]}x{plan['lattice'][1]} "
               f"batch={plan['batch_size']}", file=sys.stderr)
+        _finish_trace(args, spec)
         return 0
 
     if session is None:
@@ -132,6 +150,7 @@ def cmd_run(args) -> int:
     if not rows:
         print("nothing to do: spec has no sweep plan and --sweeps is 0 "
               "(use --dry-run to just validate)", file=sys.stderr)
+        _finish_trace(args, spec)
         return 2
 
     if args.save:
@@ -158,6 +177,7 @@ def cmd_run(args) -> int:
         validate_record({"meta": rec.meta, "rows": rec.rows})
         path = rec.write_json(args.record)
         print(f"# wrote record {path}")
+    _finish_trace(args, spec)
     return 0
 
 
@@ -214,6 +234,10 @@ def main(argv=None) -> int:
     run.add_argument("--record", nargs="?", const=".", default=None,
                      metavar="DIR_OR_PATH",
                      help="write a RunRecorder JSON embedding the spec")
+    run.add_argument("--trace", default="", metavar="PATH",
+                     help="enable span tracing; write the Chrome trace "
+                          "(.json, Perfetto-loadable) or .jsonl stream "
+                          "+ metrics snapshot here")
     run.set_defaults(fn=cmd_run)
     args = ap.parse_args(argv)
     return args.fn(args)

@@ -20,8 +20,12 @@ Two entry points share the compiled body:
   for the :class:`~repro.core.ensemble.Ensemble` driver (counter-based
   engines only, traced uint32 seeds).
 
-``DISPATCH_COUNT`` increments once per compiled-call invocation; tests
-and the fusion bench read it to assert the one-dispatch contract.
+Each compiled-call invocation is accounted through ``repro.telemetry``
+(one ``dispatches`` increment + a fenced ``measure_scan``/``dispatch``
+span when tracing is on); tests and the fusion bench read the counter
+to assert the one-dispatch contract.  The old module global
+``DISPATCH_COUNT`` survives as a deprecated read-only alias of the
+telemetry counter.
 
 Resident-tier composition (DESIGN.md S9): the scan body advances each
 measure interval through ``Engine.scan_step`` -> ``sweep_fn``, so on a
@@ -43,8 +47,20 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-#: number of compiled measure_scan dispatches issued so far (per process)
-DISPATCH_COUNT = 0
+import repro.telemetry as tel
+
+
+def __getattr__(name: str):
+    # deprecation shim (PEP 562): the pre-telemetry mutable global is now
+    # a read-only view of the process-global dispatch counter
+    if name == "DISPATCH_COUNT":
+        import warnings
+        warnings.warn(
+            "repro.analysis.measure.DISPATCH_COUNT is deprecated; read "
+            "repro.telemetry.DISPATCHES.value (or snapshot counter "
+            "deltas) instead", DeprecationWarning, stacklevel=2)
+        return tel.DISPATCHES.value
+    raise AttributeError(f"module {__name__!r} has no attribute {name!r}")
 
 
 @dataclasses.dataclass(frozen=True)
@@ -105,10 +121,13 @@ def _scan_body(engine, plan: MeasurementPlan):
 
 
 def _compiled(engine, plan: MeasurementPlan, batched: bool):
+    """Returns ``(fn, fresh)``: ``fresh`` marks a cache miss, i.e. the
+    next invocation pays XLA compilation (the ``compile`` span attr)."""
     # cache lives on the engine instance (the CounterEngine._jit_cache
     # pattern) so compiled executables die with the engine
     cache = engine.__dict__.setdefault("_measure_scan_cache", {})
     fn = cache.get((plan, batched))
+    fresh = fn is None
     if fn is None:
         run = _scan_body(engine, plan)
         if batched:
@@ -123,12 +142,24 @@ def _compiled(engine, plan: MeasurementPlan, batched: bool):
             fn = jax.jit(lambda st, beta, step0: run(st, beta, seed,
                                                      step0))
         cache[(plan, batched)] = fn
-    return fn
+    return fn, fresh
 
 
-def _bump() -> None:
-    global DISPATCH_COUNT
-    DISPATCH_COUNT += 1
+def _span(engine, plan: MeasurementPlan, fresh: bool, batch: int):
+    return tel.span("measure_scan", engine=engine.name,
+                    lattice=(engine.cfg.n, engine.cfg.m),
+                    n_measure=plan.n_measure,
+                    sweeps_between=plan.sweeps_between,
+                    thermalize=plan.thermalize, batch=batch,
+                    replicas=engine.replicas,
+                    compile="first" if fresh else "steady")
+
+
+def _account(engine, plan: MeasurementPlan, batch: int) -> None:
+    tel.record_dispatch(n_sweeps=plan.total_sweeps,
+                        sites=engine.cfg.n * engine.cfg.m,
+                        replicas=engine.replicas, batch=batch,
+                        counter_based=engine.counter_based)
 
 
 def measure_scan(engine, state, plan: MeasurementPlan, step_count: int = 0):
@@ -140,10 +171,16 @@ def measure_scan(engine, state, plan: MeasurementPlan, step_count: int = 0):
     bit-identical to the legacy python loop ``run(sweeps_between);
     measure()`` repeated ``n_measure`` times (tests/test_analysis.py).
     """
-    fn = _compiled(engine, plan, batched=False)
-    state, traj = fn(state, jnp.float32(engine.cfg.inv_temp),
-                     jnp.int32(step_count))
-    _bump()
+    fn, fresh = _compiled(engine, plan, batched=False)
+    with _span(engine, plan, fresh, batch=1) as sp:
+        with tel.span("dispatch", engine=engine.name,
+                      k=plan.total_sweeps,
+                      compile="first" if fresh else "steady") as dsp:
+            state, traj = fn(state, jnp.float32(engine.cfg.inv_temp),
+                             jnp.int32(step_count))
+            dsp.fence(traj)
+        _account(engine, plan, batch=1)
+        sp.fence((state, traj))
     traj = {k: np.asarray(v) for k, v in traj.items()}
     return state, traj, step_count + plan.total_sweeps
 
@@ -160,9 +197,17 @@ def measure_scan_batched(engine, states, inv_temps, seeds,
         raise ValueError(
             f"engine {engine.name!r} is not counter-based; batched "
             "measurement needs a traceable-seed sweep (DESIGN.md S3/S4)")
-    fn = _compiled(engine, plan, batched=True)
-    states, traj = fn(states, inv_temps, seeds, jnp.int32(step_count))
-    _bump()
+    batch = int(np.shape(seeds)[0])
+    fn, fresh = _compiled(engine, plan, batched=True)
+    with _span(engine, plan, fresh, batch=batch) as sp:
+        with tel.span("dispatch", engine=engine.name,
+                      k=plan.total_sweeps, batch=batch,
+                      compile="first" if fresh else "steady") as dsp:
+            states, traj = fn(states, inv_temps, seeds,
+                              jnp.int32(step_count))
+            dsp.fence(traj)
+        _account(engine, plan, batch=batch)
+        sp.fence((states, traj))
     # (B, n, ...) -> (n, B, ...): moveaxis, not .T, so replicated engines'
     # per-replica observable vectors keep their trailing axis intact
     traj = {k: np.moveaxis(np.asarray(v), 0, 1) for k, v in traj.items()}

@@ -34,6 +34,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+import repro.telemetry as tel
 from repro.core.engine import ENGINES, make_engine
 
 from .spec import RunSpec
@@ -158,9 +159,16 @@ class _EnsembleRunner:
         """Advance every member in one vmapped call; returns the (B,)
         per-member magnetizations (at fixed seeds this IS the
         magnetization-vs-temperature curve)."""
-        self.states, mags = self._compiled(n_sweeps)(
-            self.states, self.inv_temps, self.seeds,
-            jnp.uint32(2 * self.step_count))
+        fresh = n_sweeps not in self._jit_cache
+        fn = self._compiled(n_sweeps)
+        with self.engine._dispatch(
+                n_sweeps, batch=self.size,
+                compile="first" if fresh else "steady",
+                **self.engine.resident_attrs) as sp:
+            self.states, mags = fn(
+                self.states, self.inv_temps, self.seeds,
+                jnp.uint32(2 * self.step_count))
+            sp.fence(mags)
         self.step_count += n_sweeps
         return np.asarray(mags)
 
@@ -240,10 +248,16 @@ class _ShardedRunner:
         return got
 
     def run(self, n_sweeps: int):
+        fresh = n_sweeps not in self._jit_cache
         step, sh = self._step(n_sweeps)
-        self.state = step(*self.state, jnp.float32(self.cfg.inv_temp),
-                          jnp.uint32(self._offset_scale *
-                                     self.step_count))
+        with self.engine._dispatch(
+                n_sweeps, compile="first" if fresh else "steady",
+                mesh=list(self.spec.mesh.shape)) as sp:
+            self.state = step(*self.state,
+                              jnp.float32(self.cfg.inv_temp),
+                              jnp.uint32(self._offset_scale *
+                                         self.step_count))
+            sp.fence(self.state)
         self.step_count += n_sweeps
         return None
 
@@ -307,15 +321,17 @@ def describe(spec: RunSpec) -> dict:
     """
     cls = ENGINES[spec.engine.name]
     resident = None
-    if getattr(cls, "resident_family", None) is not None:
-        from repro.kernels.resident import plan_resident
-        plan = plan_resident(cls.resident_family, spec.lattice.n,
-                             spec.lattice.m)
-        resident = {"family": cls.resident_family,
-                    "fits_vmem": plan is not None}
-        if plan is not None:
-            resident["working_set_bytes"] = plan.working_set_bytes
-            resident["budget_bytes"] = plan.budget_bytes
+    with tel.span("spec.validate", mode=spec.mode,
+                  engine=spec.engine.name,
+                  lattice=(spec.lattice.n, spec.lattice.m)):
+        if getattr(cls, "resident_family", None) is not None:
+            from repro.kernels.resident import decision_attrs
+            # the ONE rendering of the planner decision: this dict is
+            # the --dry-run output AND the planner.decide/dispatch span
+            # attributes (satellite: dry-run and traces cannot disagree)
+            resident = decision_attrs(cls.resident_family,
+                                      spec.lattice.n, spec.lattice.m)
+            tel.instant("planner.decide", **resident)
     out = {
         "mode": spec.mode,
         "engine": spec.engine.name,
@@ -352,8 +368,16 @@ class Session:
 
     def __init__(self, spec: RunSpec, runner=None):
         self.spec = spec
-        self._runner = runner if runner is not None \
-            else _RUNNERS[spec.mode](spec)
+        if runner is not None:
+            self._runner = runner
+        else:
+            with tel.span("session.open", mode=spec.mode,
+                          engine=spec.engine.name,
+                          lattice=(spec.lattice.n, spec.lattice.m),
+                          batch=1 if spec.batch is None
+                          else spec.batch.size) as sp:
+                self._runner = _RUNNERS[spec.mode](spec)
+                sp.fence(self.state)
 
     @classmethod
     def open(cls, spec: RunSpec) -> "Session":
@@ -392,11 +416,28 @@ class Session:
         self._runner.step_count = v
 
     # -- execution ----------------------------------------------------------
+    def _flip_rate(self, n_sweeps: int, duration_ns) -> None:
+        """Update the rolling flips/ns gauge from a fenced span close
+        (only possible when tracing is on: otherwise there is no honest
+        device-complete duration to divide by)."""
+        if not duration_ns:
+            return
+        eng = self._runner.engine
+        batch = self._runner.size if self.mode == "ensemble" else 1
+        flips = n_sweeps * eng.cfg.n * eng.cfg.m * eng.replicas * batch
+        tel.REGISTRY.gauge("rolling_flips_per_ns").set(
+            flips / duration_ns)
+
     def run(self, n_sweeps: int):
         """Advance ``n_sweeps`` full lattice sweeps (every member, in
         ensemble mode).  Ensemble mode returns the (B,) per-member
         magnetizations of the fused sweep dispatch."""
-        return self._runner.run(n_sweeps)
+        with tel.span("session.run", mode=self.mode,
+                      engine=self.spec.engine.name, k=n_sweeps) as sp:
+            out = self._runner.run(n_sweeps)
+            sp.fence(self.state)
+        self._flip_rate(n_sweeps, sp.duration_ns)
+        return out
 
     def measure(self, plan=None) -> dict:
         """Run a measurement plan; defaults to ``spec.sweep``.
@@ -410,7 +451,15 @@ class Session:
                 raise ValueError(
                     "no plan: pass one or set RunSpec.sweep")
             plan = self.spec.sweep.plan()
-        return self._runner.measure(plan)
+        with tel.span("session.measure", mode=self.mode,
+                      engine=self.spec.engine.name,
+                      n_measure=plan.n_measure,
+                      sweeps_between=plan.sweeps_between,
+                      thermalize=plan.thermalize) as sp:
+            traj = self._runner.measure(plan)
+            sp.fence(self.state)
+        self._flip_rate(plan.total_sweeps, sp.duration_ns)
+        return traj
 
     def trajectory(self, n_measure: int, sweeps_between: int,
                    thermalize: int = 0) -> np.ndarray:
@@ -440,19 +489,24 @@ class Session:
         engine's named state arrays (batched in ensemble mode).
         ``extra`` adds scalar/str fields (the legacy shims pass their
         pre-spec metadata through it)."""
-        arrays = {f"state_{k}": v
-                  for k, v in self._runner.state_arrays().items()}
-        _atomic_savez(path, spec_json=self.spec.to_json(),
-                      step_count=self._runner.step_count,
-                      **(extra or {}), **arrays)
+        with tel.span("ckpt.save", path=path, mode=self.mode,
+                      step_count=self._runner.step_count):
+            arrays = {f"state_{k}": v
+                      for k, v in self._runner.state_arrays().items()}
+            _atomic_savez(path, spec_json=self.spec.to_json(),
+                          step_count=self._runner.step_count,
+                          **(extra or {}), **arrays)
 
     @classmethod
     def restore(cls, path: str) -> "Session":
         """Rebuild a session from a checkpoint alone: the embedded spec
         reconstructs engine + runner, the arrays restore the state, and
         counter-based engines continue the exact Philox stream."""
-        spec, step_count, arrays, _ = _load_checkpoint(path)
-        return cls._from_arrays(spec, arrays, step_count)
+        with tel.span("ckpt.restore", path=path) as sp:
+            spec, step_count, arrays, _ = _load_checkpoint(path)
+            sp.set(mode=spec.mode, engine=spec.engine.name,
+                   step_count=step_count)
+            return cls._from_arrays(spec, arrays, step_count)
 
     @classmethod
     def _from_arrays(cls, spec: RunSpec, arrays: dict,

@@ -19,6 +19,8 @@ from typing import Any, Optional, Tuple
 import jax
 import numpy as np
 
+import repro.telemetry as tel
+
 
 def _flatten(tree) -> dict:
     flat = jax.tree_util.tree_flatten_with_path(tree)[0]
@@ -79,21 +81,25 @@ class Checkpointer:
 
     def _write(self, step: int, host: dict,
                spec_json: Optional[str] = None) -> str:
-        path = os.path.join(self.dir, f"step_{step:010d}")
-        tmp = path + ".tmp"
-        if os.path.exists(tmp):
-            shutil.rmtree(tmp)
-        os.makedirs(tmp)
-        np.savez(os.path.join(tmp, "arrays.npz"), **host)
-        if spec_json is not None:
-            with open(os.path.join(tmp, "spec.json"), "w") as f:
-                f.write(spec_json)
-        with open(os.path.join(tmp, "DONE"), "w") as f:
-            f.write(str(step))
-        if os.path.exists(path):
-            shutil.rmtree(path)
-        os.replace(tmp, path)
-        self._gc()
+        # runs on the save_async worker thread: the span lands on its
+        # own tid in the trace, visualizing the I/O-compute overlap
+        with tel.span("ckpt.write", step=step, dir=self.dir,
+                      n_arrays=len(host)):
+            path = os.path.join(self.dir, f"step_{step:010d}")
+            tmp = path + ".tmp"
+            if os.path.exists(tmp):
+                shutil.rmtree(tmp)
+            os.makedirs(tmp)
+            np.savez(os.path.join(tmp, "arrays.npz"), **host)
+            if spec_json is not None:
+                with open(os.path.join(tmp, "spec.json"), "w") as f:
+                    f.write(spec_json)
+            with open(os.path.join(tmp, "DONE"), "w") as f:
+                f.write(str(step))
+            if os.path.exists(path):
+                shutil.rmtree(path)
+            os.replace(tmp, path)
+            self._gc()
         return path
 
     def _gc(self):

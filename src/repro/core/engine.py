@@ -40,11 +40,14 @@ Two hooks added for the measurement subsystem (DESIGN.md S7):
 """
 from __future__ import annotations
 
+from contextlib import contextmanager
 from typing import Callable, ClassVar, Dict, Optional, Type
 
 import jax
 import jax.numpy as jnp
 import numpy as np
+
+import repro.telemetry as tel
 
 from . import bitplane as bp
 from . import lattice as lat
@@ -142,8 +145,36 @@ class Engine:
                 "e": obs.energy_per_spin_full(full)}
 
     # -- dynamics -----------------------------------------------------------
+    @contextmanager
+    def _dispatch(self, n_sweeps: int, batch: int = 1, **attrs):
+        """Account + trace ONE compiled-call invocation.
+
+        Every stateful ``sweeps`` wrapper (and the batched runners)
+        launches its compiled call inside this scope: the canonical
+        counters advance unconditionally (host-side, once per call --
+        NEVER inside traced code), and when tracing is on a fenced
+        ``dispatch`` span records the phase.  ``sp.fence(out)`` inside
+        the ``with`` makes the span wait for device completion.
+        """
+        tel.record_dispatch(n_sweeps=n_sweeps,
+                            sites=self.cfg.n * self.cfg.m,
+                            replicas=self.replicas, batch=batch,
+                            counter_based=self.counter_based)
+        with tel.span("dispatch", engine=self.name,
+                      lattice=(self.cfg.n, self.cfg.m), k=n_sweeps,
+                      replicas=self.replicas, batch=batch,
+                      **attrs) as sp:
+            yield sp
+
     def sweeps(self, state, n_sweeps: int, step_count: int):
-        raise NotImplementedError
+        """Default stateful wrapper: ``scan_step`` at the config's own
+        temperature and seed, accounted as ONE dispatch.  Engines owning
+        their jit caching (CounterEngine) override it."""
+        with self._dispatch(n_sweeps) as sp:
+            out = self.scan_step(state, jnp.float32(self.cfg.inv_temp),
+                                 self.cfg.seed, step_count, n_sweeps)
+            sp.fence(out)
+        return out
 
     def scan_step(self, state, inv_temp, seed, step_count, n_sweeps: int):
         """Pure ``sweeps``: advance ``n_sweeps`` (static) from a traceable
@@ -185,10 +216,17 @@ class CounterEngine(Engine):
         super().__init__(config)
         self._jit_cache: Dict[int, Callable] = {}
         self.resident_plan = None
+        #: the planner's decision as span attributes -- the SAME dict
+        #: ``describe()`` renders in ``--dry-run``, so dry-run output
+        #: and live traces can never disagree about the tier
+        self.resident_attrs: dict = {}
         if self.resident_family is not None:
-            from repro.kernels.resident import plan_resident
+            from repro.kernels.resident import (decision_attrs,
+                                                plan_resident)
             self.resident_plan = plan_resident(self.resident_family,
                                                config.n, config.m)
+            self.resident_attrs = decision_attrs(self.resident_family,
+                                                 config.n, config.m)
 
     def color_update(self, target, op, inv_temp, is_black, seed, offset,
                      ctx=None):
@@ -248,6 +286,7 @@ class CounterEngine(Engine):
 
     def sweeps(self, state, n_sweeps: int, step_count: int):
         fn = self._jit_cache.get(n_sweeps)
+        fresh = fn is None
         if fn is None:
             seed = self.cfg.seed  # closed over: python int, full 64-bit keys
             # the incoming state buffers are donated: callers rebind
@@ -256,8 +295,13 @@ class CounterEngine(Engine):
             fn = jax.jit(lambda s, beta, off: self.sweep_fn(
                 s, beta, seed, off, n_sweeps), donate_argnums=(0,))
             self._jit_cache[n_sweeps] = fn
-        return fn(state, jnp.float32(self.cfg.inv_temp),
-                  jnp.uint32(2 * step_count))
+        with self._dispatch(n_sweeps,
+                            compile="first" if fresh else "steady",
+                            **self.resident_attrs) as sp:
+            out = fn(state, jnp.float32(self.cfg.inv_temp),
+                     jnp.uint32(2 * step_count))
+            sp.fence(out)
+        return out
 
 
 def _even_block_rows(n: int, cap: int = 256) -> int:
@@ -307,9 +351,6 @@ class BasicEngine(_PlanesEngine):
         b, w, _ = metro.run_sweeps(*state, inv_temp, key, n_sweeps)
         return (b, w)
 
-    def sweeps(self, state, n_sweeps, step_count):
-        return self.scan_step(state, jnp.float32(self.cfg.inv_temp),
-                              self.cfg.seed, step_count, n_sweeps)
 
 
 @register
@@ -586,9 +627,6 @@ class TensorCoreEngine(Engine):
                                      block=self.cfg.tc_block)
         return planes
 
-    def sweeps(self, state, n_sweeps, step_count):
-        return self.scan_step(state, jnp.float32(self.cfg.inv_temp),
-                              self.cfg.seed, step_count, n_sweeps)
 
     def state_arrays(self, state):
         return {f"plane_{k}": np.asarray(v) for k, v in state.items()}
@@ -624,9 +662,6 @@ class WolffEngine(Engine):
                                      n_sweeps)
         return new
 
-    def sweeps(self, state, n_sweeps, step_count):
-        return self.scan_step(state, jnp.float32(self.cfg.inv_temp),
-                              self.cfg.seed, step_count, n_sweeps)
 
     def state_arrays(self, state):
         return {"lattice": np.asarray(state)}
@@ -680,9 +715,6 @@ class SpinGlassEngine(Engine):
         full, _ = sg.run_sweeps(full, j_up, j_left, inv_temp, key, n_sweeps)
         return (full, j_up, j_left)
 
-    def sweeps(self, state, n_sweeps, step_count):
-        return self.scan_step(state, jnp.float32(self.cfg.inv_temp),
-                              self.cfg.seed, step_count, n_sweeps)
 
     def state_arrays(self, state):
         return {"lattice": np.asarray(state[0]),

@@ -44,6 +44,8 @@ import dataclasses
 import math
 from typing import Dict, Optional
 
+from repro.telemetry import TRACER
+
 #: modeled per-core VMEM budget for the resident working set.  Cores have
 #: ~16 MiB of VMEM (pallas_guide.md); half is left to the compiler for
 #: spills, the SMEM-adjacent scalars, and double-buffered plane I/O.
@@ -98,11 +100,37 @@ def plan_resident(family: str, n: int, m: int,
                          f"known: {sorted(_FAMILIES)}")
     budget = VMEM_BUDGET_BYTES if budget_bytes is None else budget_bytes
     ws = working_set_bytes(family, n, m)
+    if TRACER.enabled:
+        TRACER.instant("planner.decide",
+                       **decision_attrs(family, n, m,
+                                        budget_bytes=budget))
     if ws > budget:
         return None
     return ResidentPlan(family=family, n=n, m=m,
                         plane_bytes=plane_bytes(family, n, m),
                         working_set_bytes=ws, budget_bytes=budget)
+
+
+def decision_attrs(family: str, n: int, m: int,
+                   budget_bytes: Optional[int] = None) -> dict:
+    """The planner's decision and its budget arithmetic as one flat
+    JSON-scalar dict -- the SINGLE rendering shared by the ``--dry-run``
+    plan (``repro.api.session.describe``), the ``planner.decide`` trace
+    instant, and the engines' ``dispatch`` span attributes, so the three
+    can never disagree about the tier.
+    """
+    if family not in _FAMILIES:
+        raise ValueError(f"unknown resident family {family!r}; "
+                         f"known: {sorted(_FAMILIES)}")
+    budget = VMEM_BUDGET_BYTES if budget_bytes is None else budget_bytes
+    ws = working_set_bytes(family, n, m)
+    attrs = {"family": family, "fits_vmem": ws <= budget,
+             "plane_bytes": plane_bytes(family, n, m),
+             "working_set_bytes": ws, "budget_bytes": budget}
+    if ws > budget:
+        attrs["reason"] = (f"working set {ws} B exceeds VMEM budget "
+                           f"{budget} B: per-half-sweep fallback tier")
+    return attrs
 
 
 def max_square_lattice(family: str,

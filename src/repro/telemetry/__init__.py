@@ -1,0 +1,121 @@
+"""``repro.telemetry`` -- spans, counters, and trace export (DESIGN.md S12).
+
+Zero-dependency observability for the whole execution stack.  Two
+halves with different costs:
+
+* **Metrics** (:data:`REGISTRY`) are *always on*: one locked integer
+  add per compiled dispatch on the host path.  The canonical counters
+  below are the repo's physical accounting -- every BENCH dispatch
+  column and every test dispatch assertion reads them.
+* **Spans** (:data:`TRACER`) are *opt-in* (``enable()`` /
+  ``python -m repro run --trace out.json``): when disabled, a span is
+  one ``if not enabled`` branch and fencing never happens, so JAX's
+  async pipelining is preserved (<2% overhead budget, EXPERIMENTS.md).
+
+Quickstart::
+
+    import repro.telemetry as tel
+    tel.enable()
+    ... run things ...
+    tel.export("trace.json")        # Chrome trace (Perfetto-loadable)
+    tel.export("trace.jsonl")       # line-delimited stream
+    print(tel.REGISTRY.snapshot())  # counters/gauges/histograms
+
+Counter semantics (asserted in tests/test_telemetry.py):
+
+* ``dispatches``   -- +1 per compiled-call invocation (one fused
+  measure_scan = ONE dispatch, regardless of sweeps inside).
+* ``sweeps``       -- lattice-time sweeps advanced, NOT multiplied by
+  replicas or batch members (a bitplane sweep advances 32 replicas one
+  sweep = 1 here).
+* ``spin_flips``   -- update attempts: sweeps x sites x replicas x
+  batch (the flips/ns numerator of the paper's Table 1).
+* ``philox_draws`` -- uint32s drawn by counter-based engines:
+  sweeps x sites x batch (one draw per site per sweep; multispin packs
+  8 sites per word but draws 8 offsets/word, bitplane shares one draw
+  across its 32 replicas -- both land on exactly sites draws/sweep).
+"""
+from __future__ import annotations
+
+from .metrics import (REGISTRY, Counter, Gauge, Histogram,
+                      MetricsRegistry, diff_counters)
+from .schema import (TelemetryError, validate_event, validate_snapshot,
+                     validate_trace)
+from .trace import NULL_SPAN, TRACER, SpanHandle, Tracer
+
+__all__ = [
+    "TRACER", "REGISTRY", "Tracer", "MetricsRegistry",
+    "Counter", "Gauge", "Histogram", "SpanHandle", "NULL_SPAN",
+    "TelemetryError", "validate_snapshot", "validate_trace",
+    "validate_event", "diff_counters",
+    "DISPATCHES", "SWEEPS", "SPIN_FLIPS", "PHILOX_DRAWS",
+    "enable", "disable", "enabled", "reset", "span", "instant",
+    "record_dispatch", "export",
+]
+
+#: canonical counters -- module-held references survive REGISTRY.reset()
+DISPATCHES = REGISTRY.counter("dispatches")
+SWEEPS = REGISTRY.counter("sweeps")
+SPIN_FLIPS = REGISTRY.counter("spin_flips")
+PHILOX_DRAWS = REGISTRY.counter("philox_draws")
+
+
+def enable() -> None:
+    """Turn span tracing on (counters are always on)."""
+    TRACER.enable()
+
+
+def disable() -> None:
+    TRACER.disable()
+
+
+def enabled() -> bool:
+    return TRACER.enabled
+
+
+def reset() -> None:
+    """Drop recorded events and zero every metric (test isolation /
+    the start of a traced bench run), keeping instrument identity."""
+    TRACER.clear()
+    REGISTRY.reset()
+
+
+#: module-level aliases so call sites read ``tel.span("dispatch", ...)``
+span = TRACER.span
+instant = TRACER.instant
+
+
+def record_dispatch(*, n_sweeps: int, sites: int, replicas: int = 1,
+                    batch: int = 1, counter_based: bool = False) -> None:
+    """Account one compiled-call invocation into the canonical counters.
+
+    Call this from the stateful host wrapper that launches the compiled
+    function -- NEVER from inside traced code (a jit trace would run the
+    increment once, at trace time).
+    """
+    if n_sweeps < 0:
+        raise ValueError(f"record_dispatch: n_sweeps={n_sweeps}")
+    draws = int(n_sweeps) * int(sites)
+    # all instruments share the registry lock: batch the adds into one
+    # acquisition -- this sits on every dispatch path, so the disabled-
+    # telemetry overhead budget (<2%, EXPERIMENTS.md) is set right here
+    with REGISTRY._lock:
+        DISPATCHES._value += 1
+        SWEEPS._value += int(n_sweeps)
+        SPIN_FLIPS._value += draws * int(replicas) * int(batch)
+        if counter_based:
+            PHILOX_DRAWS._value += draws * int(batch)
+
+
+def export(path: str, meta: dict | None = None) -> str:
+    """Validate and write the current trace + metrics snapshot.
+
+    ``*.jsonl`` -> line-delimited stream; anything else -> Chrome
+    trace-event JSON (open in Perfetto / ``chrome://tracing``).
+    """
+    snap = REGISTRY.snapshot()
+    validate_snapshot(snap)
+    if path.endswith(".jsonl"):
+        return TRACER.export_jsonl(path, metrics=snap, meta=meta)
+    validate_trace(TRACER.to_chrome(metrics=snap, meta=meta))
+    return TRACER.export_chrome(path, metrics=snap, meta=meta)

@@ -7,7 +7,6 @@ from repro.analysis import (MeasurementPlan, RunRecorder, Welford, binder,
                             binder_crossing, blocking_error, jackknife,
                             parse_derived, specific_heat, susceptibility,
                             tau_int)
-from repro.analysis import measure as msr
 from repro.core import observables as obs
 from repro.core.engine import ENGINES
 from repro.core.ensemble import Ensemble
@@ -46,11 +45,12 @@ def test_scan_trajectory_bitexact_vs_python_loop(engine):
 
 
 def test_scan_trajectory_is_one_dispatch():
+    import repro.telemetry as tel
     sim = Simulation(SimConfig(n=16, m=16, temperature=2.0, seed=1,
                                engine="multispin"))
-    before = msr.DISPATCH_COUNT
+    before = tel.DISPATCHES.value
     sim.trajectory(32, 2, thermalize=8)
-    assert msr.DISPATCH_COUNT - before == 1  # legacy loop: 33 dispatches
+    assert tel.DISPATCHES.value - before == 1  # legacy: 33 dispatches
 
 
 def test_measure_fields_and_step_accounting():
