@@ -524,6 +524,83 @@ def kernel_block_sweep(n=128, sweeps=3):
              f"vmem_working_set_kb={vmem_kb:.0f}", timed=t)
 
 
+# ---------------------------------------------------------------------------
+# resilience: checkpoint overhead + recovery latency (DESIGN.md S13)
+# ---------------------------------------------------------------------------
+
+def resilience_ckpt(n=128, sweeps=16):
+    """Integrity tax and recovery latency of the resilience subsystem.
+
+    Four rows: CRC32C ladder throughput (the per-byte integrity tax on
+    every checkpointed array), one verified checkpoint save (npz +
+    manifest + atomic commit), one verified restore (discover newest
+    valid step, CRC-check every array -- the recovery-latency number),
+    and a supervised run with cadence OFF vs a plain ``Session.run`` of
+    the same sweeps (the zero-hot-path-overhead contract: the ratio
+    must stay ~1)."""
+    import shutil
+    import tempfile
+
+    from repro.api import EngineSpec, LatticeSpec, RunSpec, Session
+    from repro.ckpt import Checkpointer
+    from repro.resilience import Supervisor, integrity
+
+    buf = np.random.default_rng(0).bytes(4 << 20)
+    t = _timeit(lambda: integrity.crc32c(buf), label="resil_crc")
+    _row("resil_crc32c_4MiB", t.mean_s * 1e6,
+         f"mb_per_s={len(buf)/t.mean_s/1e6:.1f}", timed=t)
+
+    spec = RunSpec(lattice=LatticeSpec(n=n, m=n),
+                   engine=EngineSpec("multispin"),
+                   temperature=2.27, seed=9)
+    d = tempfile.mkdtemp(prefix="bench_resil_")
+    try:
+        s = Session.open(spec)
+        s.run(2)
+        arrays = s._runner.state_arrays()
+        nbytes = sum(np.asarray(v).nbytes for v in arrays.values())
+        ck = Checkpointer(d, keep=2)
+        step_box = [0]
+
+        def save():
+            step_box[0] += 1
+            ck.save(step_box[0], arrays, spec_json=spec.to_json())
+            return step_box[0]
+
+        t = _timeit(save, label="resil_save")
+        _row(f"resil_ckpt_save_{n}", t.mean_s * 1e6,
+             f"state_kb={nbytes/1024:.0f};"
+             f"mb_per_s={nbytes/t.mean_s/1e6:.2f}", timed=t)
+
+        t = _timeit(lambda: ck.load_arrays()[0], label="resil_restore")
+        _row(f"resil_ckpt_restore_{n}", t.mean_s * 1e6,
+             f"state_kb={nbytes/1024:.0f};"
+             f"mb_per_s={nbytes/t.mean_s/1e6:.2f}", timed=t)
+    finally:
+        shutil.rmtree(d, ignore_errors=True)
+
+    def plain():
+        s = Session.open(spec)
+        s.run(sweeps)
+        return s.magnetization()
+
+    def supervised():
+        dd = tempfile.mkdtemp(prefix="bench_resil_sup_")
+        try:
+            sup = Supervisor(spec, dd, every_sweeps=0, chunk=sweeps,
+                             install_signal_handlers=False)
+            res = sup.run(sweeps)
+            return res.step_count
+        finally:
+            shutil.rmtree(dd, ignore_errors=True)
+
+    dt_plain = _timeit(plain, iters=2, label="resil_plain").mean_s
+    t = _timeit(supervised, iters=2, label="resil_supervised")
+    _row(f"resil_supervised_overhead_{n}", t.mean_s * 1e6,
+         f"plain_us={dt_plain*1e6:.1f};"
+         f"overhead_ratio={t.mean_s/dt_plain:.3f}", timed=t)
+
+
 def main() -> None:
     global _RECORDER, _ENGINE_FILTER, _TRIALS
     ap = argparse.ArgumentParser()
@@ -577,7 +654,8 @@ def main() -> None:
                table1_bitplane, table1_resident, table2_multispin_sizes,
                table2_ensemble_batch, table3_weak_scaling,
                table4_strong_scaling, table5_packed_scaling,
-               fig5_validation, kernel_block_sweep, roofline_summary]
+               fig5_validation, kernel_block_sweep, resilience_ckpt,
+               roofline_summary]
     only = [tok for tok in args.only.split(",") if tok]
     selected = [b for b in benches
                 if not only or any(tok in b.__name__ for tok in only)]

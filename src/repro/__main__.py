@@ -92,6 +92,33 @@ def _finish_trace(args, spec) -> None:
           file=sys.stderr)
 
 
+def _cmd_supervise(args, spec) -> int:
+    """The ``--supervise DIR`` path: preemption-safe supervised run
+    with periodic checkpoints and auto-resume (DESIGN.md S13).  Exit 0
+    on completion, 3 when preempted (progress checkpointed -- rerun
+    the same command to resume)."""
+    from repro.resilience import Supervisor, faults
+    faults.install_from_env()  # CI chaos: REPRO_FAULTS JSON plan
+    if not args.sweeps:
+        print("--supervise needs --sweeps N (the run target)",
+              file=sys.stderr)
+        return 2
+    sup = Supervisor(spec, args.supervise,
+                     every_sweeps=args.ckpt_every_sweeps,
+                     every_seconds=args.ckpt_every_seconds,
+                     chunk=args.chunk, keep=args.keep)
+    if sup.resumed_from is not None:
+        print(f"# resumed from step {sup.resumed_from} "
+              f"in {args.supervise}")
+    res = sup.run(args.sweeps)
+    print(f"supervised run {res.status} at sweep {res.step_count}/"
+          f"{args.sweeps}; checkpoints written: "
+          f"{res.checkpoints_written}")
+    print(f"final_state_digest={res.digest}")
+    _finish_trace(args, spec)
+    return 0 if res.completed else 3
+
+
 def cmd_run(args) -> int:
     from repro.api import Session, describe
 
@@ -122,6 +149,9 @@ def cmd_run(args) -> int:
               f"batch={plan['batch_size']}", file=sys.stderr)
         _finish_trace(args, spec)
         return 0
+
+    if args.supervise:
+        return _cmd_supervise(args, spec)
 
     if session is None:
         session = Session.open(spec)
@@ -229,6 +259,25 @@ def main(argv=None) -> int:
     run.add_argument("--save", default="", help="checkpoint path to write")
     run.add_argument("--restore", default="",
                      help="checkpoint to resume (overrides spec/flags)")
+    # supervised (fault-tolerant) execution
+    run.add_argument("--supervise", default="", metavar="DIR",
+                     help="run under the resilience supervisor: "
+                          "periodic verified checkpoints into DIR, "
+                          "SIGTERM/SIGINT-safe, auto-resume from the "
+                          "newest valid step (exit 3 = preempted, "
+                          "rerun to resume)")
+    run.add_argument("--ckpt-every-sweeps", type=int, default=0,
+                     help="supervisor checkpoint cadence in sweeps "
+                          "(0: off)")
+    run.add_argument("--ckpt-every-seconds", type=float, default=0.0,
+                     help="supervisor checkpoint cadence in wall-clock "
+                          "seconds (0: off)")
+    run.add_argument("--chunk", type=int, default=64,
+                     help="supervisor sweep-chunk between control "
+                          "points (fixed grid: part of the bit-exact-"
+                          "resume contract for key-based engines)")
+    run.add_argument("--keep", type=int, default=3,
+                     help="checkpoint steps the supervisor retains")
     run.add_argument("--out-spec", default="",
                      help="write the canonical spec JSON here")
     run.add_argument("--record", nargs="?", const=".", default=None,

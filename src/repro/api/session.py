@@ -36,6 +36,7 @@ import numpy as np
 
 import repro.telemetry as tel
 from repro.core.engine import ENGINES, make_engine
+from repro.resilience import degrade
 
 from .spec import RunSpec
 
@@ -158,17 +159,28 @@ class _EnsembleRunner:
     def run(self, n_sweeps: int) -> np.ndarray:
         """Advance every member in one vmapped call; returns the (B,)
         per-member magnetizations (at fixed seeds this IS the
-        magnetization-vs-temperature curve)."""
-        fresh = n_sweeps not in self._jit_cache
-        fn = self._compiled(n_sweeps)
-        with self.engine._dispatch(
-                n_sweeps, batch=self.size,
-                compile="first" if fresh else "steady",
-                **self.engine.resident_attrs) as sp:
-            self.states, mags = fn(
-                self.states, self.inv_temps, self.seeds,
-                jnp.uint32(2 * self.step_count))
-            sp.fence(mags)
+        magnetization-vs-temperature curve).
+
+        Launched through ``resilience.degrade.run_dispatch``: a
+        resident-tier demotion clears this runner's jit cache too
+        (``on_demote``), so the retry re-traces ``sweep_fn`` on the
+        fallback tier."""
+        def attempt():
+            fresh = n_sweeps not in self._jit_cache
+            fn = self._compiled(n_sweeps)
+            with self.engine._dispatch(
+                    n_sweeps, batch=self.size,
+                    compile="first" if fresh else "steady",
+                    **self.engine.resident_attrs) as sp:
+                states, mags = fn(
+                    self.states, self.inv_temps, self.seeds,
+                    jnp.uint32(2 * self.step_count))
+                sp.fence(mags)
+            return states, mags
+
+        self.states, mags = degrade.run_dispatch(
+            attempt, engine=self.engine,
+            on_demote=self._jit_cache.clear)
         self.step_count += n_sweeps
         return np.asarray(mags)
 
@@ -248,16 +260,21 @@ class _ShardedRunner:
         return got
 
     def run(self, n_sweeps: int):
-        fresh = n_sweeps not in self._jit_cache
-        step, sh = self._step(n_sweeps)
-        with self.engine._dispatch(
-                n_sweeps, compile="first" if fresh else "steady",
-                mesh=list(self.spec.mesh.shape)) as sp:
-            self.state = step(*self.state,
-                              jnp.float32(self.cfg.inv_temp),
-                              jnp.uint32(self._offset_scale *
-                                         self.step_count))
-            sp.fence(self.state)
+        def attempt():
+            fresh = n_sweeps not in self._jit_cache
+            step, sh = self._step(n_sweeps)
+            with self.engine._dispatch(
+                    n_sweeps, compile="first" if fresh else "steady",
+                    mesh=list(self.spec.mesh.shape)) as sp:
+                state = step(*self.state,
+                             jnp.float32(self.cfg.inv_temp),
+                             jnp.uint32(self._offset_scale *
+                                        self.step_count))
+                sp.fence(state)
+            return state
+
+        self.state = degrade.run_dispatch(attempt, engine=self.engine,
+                                          on_demote=self._jit_cache.clear)
         self.step_count += n_sweeps
         return None
 
@@ -484,6 +501,21 @@ class Session:
         return describe(self.spec)
 
     # -- fault tolerance ----------------------------------------------------
+    def state_digest(self) -> str:
+        """CRC32C hex digest of (step_count, every named state array):
+        two sessions with equal digests hold bit-identical lattices at
+        the same point of the trajectory.  The bit-exact-resume tests
+        and the CI chaos job compare exactly this string."""
+        from repro.resilience import integrity
+        crc = integrity.crc32c(
+            f"step_count={self._runner.step_count}".encode())
+        for k, v in sorted(self._runner.state_arrays().items()):
+            a = np.ascontiguousarray(np.asarray(v))
+            crc = integrity.crc32c(
+                f"{k}:{a.dtype}:{a.shape}:".encode(), crc)
+            crc = integrity.crc32c(a.tobytes(), crc)
+        return f"{crc:08x}"
+
     def save(self, path: str, extra: Optional[dict] = None) -> None:
         """Atomic checkpoint: serialized spec + step count + the
         engine's named state arrays (batched in ensemble mode).

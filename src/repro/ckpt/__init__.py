@@ -1,1 +1,2 @@
-from .checkpointer import Checkpointer  # noqa: F401
+from .checkpointer import (Checkpointer, CheckpointError,  # noqa: F401
+                           CheckpointIntegrityError)

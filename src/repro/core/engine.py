@@ -48,6 +48,7 @@ import jax.numpy as jnp
 import numpy as np
 
 import repro.telemetry as tel
+from repro.resilience import degrade
 
 from . import bitplane as bp
 from . import lattice as lat
@@ -169,12 +170,21 @@ class Engine:
     def sweeps(self, state, n_sweeps: int, step_count: int):
         """Default stateful wrapper: ``scan_step`` at the config's own
         temperature and seed, accounted as ONE dispatch.  Engines owning
-        their jit caching (CounterEngine) override it."""
-        with self._dispatch(n_sweeps) as sp:
-            out = self.scan_step(state, jnp.float32(self.cfg.inv_temp),
-                                 self.cfg.seed, step_count, n_sweeps)
-            sp.fence(out)
-        return out
+        their jit caching (CounterEngine) override it.
+
+        Launched through ``resilience.degrade.run_dispatch``: transient
+        failures retry with bounded backoff; each (re)attempt is its
+        own accounted dispatch.
+        """
+        def attempt():
+            with self._dispatch(n_sweeps) as sp:
+                out = self.scan_step(state,
+                                     jnp.float32(self.cfg.inv_temp),
+                                     self.cfg.seed, step_count, n_sweeps)
+                sp.fence(out)
+            return out
+
+        return degrade.run_dispatch(attempt, engine=self)
 
     def scan_step(self, state, inv_temp, seed, step_count, n_sweeps: int):
         """Pure ``sweeps``: advance ``n_sweeps`` (static) from a traceable
@@ -284,24 +294,47 @@ class CounterEngine(Engine):
         # one half-sweep offset per color: cumulative offset = 2 * sweeps
         return self.sweep_fn(state, inv_temp, seed, 2 * step_count, n_sweeps)
 
+    def _demote_resident(self, reason: str) -> None:
+        """Demote this (family, lattice) to the per-half-sweep fallback
+        tier for the rest of the process (DESIGN.md S13): record it in
+        the process-global registry (so freshly built engines and
+        ``--dry-run`` plans agree), drop the plan, re-render the span
+        attributes, and invalidate the jit cache so the next dispatch
+        traces ``sweep_fn``'s fallback branch.  Both tiers draw the
+        same Philox stream, so the trajectory does not fork."""
+        from repro.kernels.resident import decision_attrs
+        degrade.demote(self.resident_family, self.cfg.n, self.cfg.m,
+                       reason)
+        self.resident_plan = None
+        self.resident_attrs = decision_attrs(self.resident_family,
+                                             self.cfg.n, self.cfg.m)
+        self._jit_cache.clear()
+
     def sweeps(self, state, n_sweeps: int, step_count: int):
-        fn = self._jit_cache.get(n_sweeps)
-        fresh = fn is None
-        if fn is None:
-            seed = self.cfg.seed  # closed over: python int, full 64-bit keys
-            # the incoming state buffers are donated: callers rebind
-            # (state = engine.sweeps(state, ...)), so large lattices never
-            # hold two copies of a plane in HBM
-            fn = jax.jit(lambda s, beta, off: self.sweep_fn(
-                s, beta, seed, off, n_sweeps), donate_argnums=(0,))
-            self._jit_cache[n_sweeps] = fn
-        with self._dispatch(n_sweeps,
-                            compile="first" if fresh else "steady",
-                            **self.resident_attrs) as sp:
-            out = fn(state, jnp.float32(self.cfg.inv_temp),
-                     jnp.uint32(2 * step_count))
-            sp.fence(out)
-        return out
+        def attempt():
+            # fn is re-read from the cache on every (re)attempt: a
+            # demotion clears the cache, so the retry traces and runs
+            # the fallback tier
+            fn = self._jit_cache.get(n_sweeps)
+            fresh = fn is None
+            if fn is None:
+                # seed closed over: python int, full 64-bit keys
+                seed = self.cfg.seed
+                # the incoming state buffers are donated: callers
+                # rebind (state = engine.sweeps(state, ...)), so large
+                # lattices never hold two copies of a plane in HBM
+                fn = jax.jit(lambda s, beta, off: self.sweep_fn(
+                    s, beta, seed, off, n_sweeps), donate_argnums=(0,))
+                self._jit_cache[n_sweeps] = fn
+            with self._dispatch(n_sweeps,
+                                compile="first" if fresh else "steady",
+                                **self.resident_attrs) as sp:
+                out = fn(state, jnp.float32(self.cfg.inv_temp),
+                         jnp.uint32(2 * step_count))
+                sp.fence(out)
+            return out
+
+        return degrade.run_dispatch(attempt, engine=self)
 
 
 def _even_block_rows(n: int, cap: int = 256) -> int:

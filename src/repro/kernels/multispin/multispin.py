@@ -101,7 +101,12 @@ def multispin_update(target_words, op_words, inv_temp, *, is_black: bool,
 
     if thresholds is None:
         thresholds = ms.acceptance_thresholds(inv_temp)
-    seeds = jnp.array([seed & 0xFFFFFFFF, offset], jnp.uint32)
+    # seed may be a python int or a traced uint32 scalar (ensemble vmap,
+    # demoted-fallback dispatch); mask in python only when it IS python
+    if isinstance(seed, (int, np.integer)):
+        seed = seed & 0xFFFFFFFF
+    seeds = jnp.stack([jnp.asarray(seed).astype(jnp.uint32),
+                       jnp.asarray(offset).astype(jnp.uint32)])
 
     row_spec = pl.BlockSpec((block_rows, w), lambda i: (i, 0))
     return pl.pallas_call(

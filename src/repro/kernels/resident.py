@@ -44,6 +44,7 @@ import dataclasses
 import math
 from typing import Dict, Optional
 
+from repro.resilience import degrade
 from repro.telemetry import TRACER
 
 #: modeled per-core VMEM budget for the resident working set.  Cores have
@@ -94,6 +95,9 @@ def plan_resident(family: str, n: int, m: int,
     Returns a :class:`ResidentPlan` when the modeled working set fits
     ``budget_bytes`` (default :data:`VMEM_BUDGET_BYTES`, read at call
     time so tests can move the fallback boundary), else ``None``.
+    A (family, lattice) demoted by the dispatch-recovery layer
+    (``resilience.degrade``, e.g. after a RESOURCE_EXHAUSTED launch)
+    never fits again this process, whatever the model says.
     """
     if family not in _FAMILIES:
         raise ValueError(f"unknown resident family {family!r}; "
@@ -104,7 +108,7 @@ def plan_resident(family: str, n: int, m: int,
         TRACER.instant("planner.decide",
                        **decision_attrs(family, n, m,
                                         budget_bytes=budget))
-    if ws > budget:
+    if ws > budget or degrade.demotion_reason(family, n, m) is not None:
         return None
     return ResidentPlan(family=family, n=n, m=m,
                         plane_bytes=plane_bytes(family, n, m),
@@ -127,7 +131,12 @@ def decision_attrs(family: str, n: int, m: int,
     attrs = {"family": family, "fits_vmem": ws <= budget,
              "plane_bytes": plane_bytes(family, n, m),
              "working_set_bytes": ws, "budget_bytes": budget}
-    if ws > budget:
+    demoted = degrade.demotion_reason(family, n, m)
+    if demoted is not None:
+        attrs["demoted"] = True
+        attrs["reason"] = (f"demoted to per-half-sweep fallback tier: "
+                           f"{demoted}")
+    elif ws > budget:
         attrs["reason"] = (f"working set {ws} B exceeds VMEM budget "
                            f"{budget} B: per-half-sweep fallback tier")
     return attrs

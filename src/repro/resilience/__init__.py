@@ -1,0 +1,42 @@
+"""``repro.resilience`` -- fault tolerance for long unattended runs.
+
+Four pieces (DESIGN.md S13), built for the record-scale follow-ups
+(rack-scale multi-day runs, arXiv 2502.18624) where preemption, OOM,
+and partial checkpoint writes are routine:
+
+* :mod:`~repro.resilience.integrity` -- CRC32C checkpoint manifests
+  and verify-on-restore;
+* :mod:`~repro.resilience.faults` -- deterministic fault injection
+  (crash topologies on disk, transient/OOM dispatch failures);
+* :mod:`~repro.resilience.degrade` -- bounded retry/backoff and
+  resident-tier demotion around every compiled-call launch;
+* :class:`Supervisor` -- the run supervisor behind
+  ``python -m repro run --supervise``: periodic checkpoints,
+  SIGTERM/SIGINT-safe preemption, resume-from-newest-valid-step with
+  a bit-exact-resume contract.
+
+``Supervisor`` is loaded lazily (PEP 562): it imports
+``repro.api.session`` which imports ``repro.core.engine``, and the
+engine layer imports this package for the degrade path -- eager
+loading would cycle.
+"""
+from __future__ import annotations
+
+from . import degrade, faults, integrity
+from .errors import (ResilienceError, SimulatedResourceExhausted,
+                     SupervisorError, TransientDispatchError)
+
+__all__ = [
+    "degrade", "faults", "integrity",
+    "ResilienceError", "TransientDispatchError",
+    "SimulatedResourceExhausted", "SupervisorError",
+    "Supervisor", "SupervisorResult",
+]
+
+
+def __getattr__(name: str):
+    if name in ("Supervisor", "SupervisorResult"):
+        from .supervisor import Supervisor, SupervisorResult
+        return {"Supervisor": Supervisor,
+                "SupervisorResult": SupervisorResult}[name]
+    raise AttributeError(f"module {__name__!r} has no attribute {name!r}")

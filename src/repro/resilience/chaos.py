@@ -1,0 +1,148 @@
+"""Chaos drill: kill, corrupt, resume, compare digests (DESIGN.md S13).
+
+The end-to-end fault-tolerance gate CI runs on every push, usable
+locally as well:
+
+    python -m repro.resilience.chaos --workdir /tmp/chaos
+
+Four acts, all through the real ``python -m repro run --supervise``
+CLI in subprocesses:
+
+1. an uninterrupted **reference** run; its ``final_state_digest=``
+   line is the ground truth;
+2. a **chaos** run SIGTERM-killed as soon as its first checkpoint
+   commits (the preemption path);
+3. the newest committed checkpoint is **corrupted** with
+   ``python -m repro.resilience corrupt`` (flip-byte), so the resume
+   must quarantine it and fall back;
+4. the run is **resumed** under an injected transient dispatch fault
+   (``REPRO_FAULTS``), exercising the retry path, and must finish with
+   a digest bit-identical to the reference.
+
+Exit 0 iff the recovered digest matches.  The kill deliberately races
+a fast run: when the run completes before the signal lands (or the
+signal lands before the CLI installs its handler), the drill still
+corrupts + resumes -- the digest contract is the same either way.
+"""
+from __future__ import annotations
+
+import argparse
+import glob
+import json
+import os
+import shutil
+import signal
+import subprocess
+import sys
+import time
+
+
+def _cli(args, ckpt_dir: str) -> list:
+    return [sys.executable, "-m", "repro", "run",
+            "--n", str(args.n), "--engine", args.engine,
+            "--temperature", str(args.temperature),
+            "--seed", str(args.seed),
+            "--supervise", ckpt_dir, "--sweeps", str(args.sweeps),
+            "--ckpt-every-sweeps", str(args.every),
+            "--chunk", str(args.chunk), "--keep", "4"]
+
+
+def _digest(out: str) -> str:
+    for line in out.splitlines():
+        if line.startswith("final_state_digest="):
+            return line.split("=", 1)[1].strip()
+    raise SystemExit(f"no final_state_digest line in output:\n{out}")
+
+
+def _committed_steps(ckpt_dir: str) -> list:
+    return glob.glob(os.path.join(ckpt_dir, "step_*", "DONE"))
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(
+        prog="python -m repro.resilience.chaos",
+        description="supervised-run chaos drill (kill/corrupt/resume)")
+    ap.add_argument("--workdir", default="results/chaos")
+    ap.add_argument("--n", type=int, default=64)
+    ap.add_argument("--engine", default="multispin")
+    ap.add_argument("--temperature", type=float, default=2.27)
+    ap.add_argument("--seed", type=int, default=11)
+    ap.add_argument("--sweeps", type=int, default=2048)
+    ap.add_argument("--chunk", type=int, default=8)
+    ap.add_argument("--every", type=int, default=64,
+                    help="checkpoint cadence in sweeps")
+    ap.add_argument("--timeout", type=float, default=600.0,
+                    help="per-subprocess wall-clock budget (s)")
+    args = ap.parse_args(argv)
+
+    env = dict(os.environ)
+    env.pop("REPRO_FAULTS", None)  # the reference must run clean
+    ref_dir = os.path.join(args.workdir, "ref")
+    chaos_dir = os.path.join(args.workdir, "chaos")
+    for d in (ref_dir, chaos_dir):
+        shutil.rmtree(d, ignore_errors=True)
+    os.makedirs(args.workdir, exist_ok=True)
+
+    print("# [1/4] reference run (uninterrupted)", flush=True)
+    ref = subprocess.run(_cli(args, ref_dir), env=env, text=True,
+                         capture_output=True, timeout=args.timeout)
+    print(ref.stdout, end="", flush=True)
+    if ref.returncode != 0:
+        print(ref.stderr, file=sys.stderr)
+        return 1
+    want = _digest(ref.stdout)
+
+    print("# [2/4] chaos run: SIGTERM after the first committed step",
+          flush=True)
+    proc = subprocess.Popen(_cli(args, chaos_dir), env=env, text=True,
+                            stdout=subprocess.PIPE,
+                            stderr=subprocess.STDOUT)
+    deadline = time.monotonic() + args.timeout
+    while (proc.poll() is None and time.monotonic() < deadline
+           and not _committed_steps(chaos_dir)):
+        time.sleep(0.01)
+    if proc.poll() is None:
+        proc.send_signal(signal.SIGTERM)
+    out, _ = proc.communicate(timeout=args.timeout)
+    print(out, end="", flush=True)
+    # 3 = preempted-and-checkpointed (the intended path); 0 = the run
+    # finished before the signal landed; -SIGTERM = the signal landed
+    # in the startup window before the CLI installed its handler --
+    # every one of them leaves a directory the drill can continue from
+    if proc.returncode not in (0, 3, -signal.SIGTERM):
+        print(f"unexpected chaos-run exit {proc.returncode}",
+              file=sys.stderr)
+        return 1
+    print(f"# chaos run exit {proc.returncode}", flush=True)
+
+    print("# [3/4] corrupting newest committed checkpoint (flip-byte)",
+          flush=True)
+    if _committed_steps(chaos_dir):
+        subprocess.run([sys.executable, "-m", "repro.resilience",
+                        "corrupt", chaos_dir], env=env, check=True,
+                       timeout=args.timeout)
+    else:
+        print("# no committed checkpoint survived the kill -- the "
+              "resume below is a fresh (still bit-exact) run")
+
+    print("# [4/4] resume under an injected transient dispatch fault",
+          flush=True)
+    env["REPRO_FAULTS"] = json.dumps({"transient_dispatches": 1})
+    res = subprocess.run(_cli(args, chaos_dir), env=env, text=True,
+                         capture_output=True, timeout=args.timeout)
+    print(res.stdout, end="", flush=True)
+    if res.returncode != 0:
+        print(res.stderr, file=sys.stderr)
+        return 1
+    got = _digest(res.stdout)
+    if got != want:
+        print(f"FAIL: recovered digest {got} != reference {want}",
+              file=sys.stderr)
+        return 1
+    print(f"chaos drill OK: digest {got} bit-identical after "
+          f"kill + corruption + injected fault")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

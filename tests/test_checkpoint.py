@@ -4,8 +4,10 @@ import os
 import jax
 import jax.numpy as jnp
 import numpy as np
+import pytest
 
-from repro.ckpt import Checkpointer
+from repro.ckpt import Checkpointer, CheckpointError
+from repro.resilience import integrity
 
 
 def _tree(seed=0):
@@ -49,6 +51,76 @@ def test_async_save(tmp_path):
     ck.wait()
     step, r = ck.restore(t)
     assert step == 7
+
+
+def test_manifest_committed_under_done(tmp_path):
+    """Every save writes a CRC32C manifest BEFORE the DONE marker, so
+    the atomic rename commits payload and checksums together."""
+    ck = Checkpointer(str(tmp_path))
+    ck.save(4, _tree())
+    step_dir = tmp_path / "step_0000000004"
+    manifest = integrity.load_manifest(str(step_dir))
+    assert manifest["step"] == 4
+    assert "arrays.npz" in manifest["files"]
+    assert set(manifest["arrays"]) == {"a", "nested/b", "nested/c/0",
+                                       "nested/c/1"}
+    assert ck.validate_step(4) == []
+
+
+def test_async_writer_error_rethrown(tmp_path, monkeypatch):
+    """A save_async worker failure must surface on the NEXT call into
+    the checkpointer (store-and-rethrow), not vanish with the daemon
+    thread."""
+    ck = Checkpointer(str(tmp_path))
+
+    def boom(*a, **k):
+        raise OSError("disk full (injected)")
+
+    monkeypatch.setattr(np, "savez", boom)
+    ck.save_async(1, _tree())
+    with pytest.raises(CheckpointError, match="disk full"):
+        ck.wait()
+    monkeypatch.undo()
+    # the error is consumed: the checkpointer keeps working after
+    ck.save(2, _tree())
+    assert ck.latest_step() == 2
+    ck.close()
+
+
+def test_restore_shape_mismatch_typed_error(tmp_path):
+    """Load-path guards are typed errors naming key and shapes, not
+    bare asserts (which vanish under python -O)."""
+    ck = Checkpointer(str(tmp_path))
+    ck.save(1, {"a": np.zeros((4, 4))})
+    with pytest.raises(CheckpointError) as ei:
+        ck.restore({"a": np.zeros((8, 2))})
+    assert "'a'" in str(ei.value)
+    assert "(4, 4)" in str(ei.value) and "(8, 2)" in str(ei.value)
+    with pytest.raises(CheckpointError, match="missing array"):
+        ck.restore({"other": np.zeros((4, 4))})
+
+
+def test_missing_checkpoint_typed_error(tmp_path):
+    ck = Checkpointer(str(tmp_path))
+    with pytest.raises(CheckpointError, match="no checkpoint"):
+        ck.restore({"a": np.zeros(2)})
+    with pytest.raises(CheckpointError, match="no valid checkpoint"):
+        ck.read_spec()
+
+
+def test_restore_falls_back_past_corrupt_step(tmp_path):
+    """Byte corruption under a valid DONE marker: restore verifies the
+    CRC manifest, quarantines the bad step, and restores the previous
+    good one."""
+    ck = Checkpointer(str(tmp_path), keep=0)
+    t = _tree()
+    ck.save(1, t)
+    ck.save(2, t)
+    from repro.resilience import faults
+    faults.flip_byte(str(tmp_path), 2)
+    step, r = ck.restore(t)
+    assert step == 1
+    assert (tmp_path / "quarantine_step_0000000002").exists()
 
 
 def test_elastic_reshard(tmp_path):
