@@ -601,6 +601,53 @@ def resilience_ckpt(n=128, sweeps=16):
          f"overhead_ratio={t.mean_s/dt_plain:.3f}", timed=t)
 
 
+def serve_throughput(n=64, k=8, sweeps=64):
+    """Sweep-farm ingestion rate in specs/sec (DESIGN.md S14).
+
+    One persistent farm, waves of ``k`` compatible single-lattice
+    specs per timed call: the first wave compiles, steady waves hit
+    the compiled-runner pool (``_EnsembleRunner.rebind``) and fuse
+    into ONE vmapped dispatch -- the measured ``dispatches`` field is
+    the coalescing evidence (~1/call coalesced vs ~k/call solo).  The
+    solo row runs the same waves at ``max_batch=1`` so the coalescing
+    win is a ratio inside one bench record."""
+    import shutil
+    import tempfile
+
+    from repro.api import EngineSpec, LatticeSpec, RunSpec
+    from repro.serve.server import SweepFarm
+
+    def run_waves(max_batch, tag):
+        d = tempfile.mkdtemp(prefix=f"bench_farm_{tag}_")
+        farm = SweepFarm(d, max_batch=max_batch, chunk=sweeps,
+                         max_queue=1_000_000)
+        wave = [0]
+
+        def one_wave():
+            w = wave[0]
+            wave[0] += 1
+            for i in range(k):
+                spec = RunSpec(
+                    lattice=LatticeSpec(n=n, m=n),
+                    engine=EngineSpec("multispin"),
+                    temperature=2.0 + 0.05 * i, seed=k * w + i)
+                farm.submit({"spec": spec.to_dict(),
+                             "sweeps": sweeps})
+            return farm.run_until_idle()
+
+        try:
+            t = _timeit(one_wave, iters=2, label=f"serve_{tag}")
+            _row(f"serve_{tag}_k{k}_{n}", t.mean_s * 1e6,
+                 f"specs_per_s={k / t.mean_s:.2f};k={k};"
+                 f"sweeps={sweeps};max_batch={max_batch}", timed=t)
+        finally:
+            farm.close()
+            shutil.rmtree(d, ignore_errors=True)
+
+    run_waves(k, "coalesced")
+    run_waves(1, "solo")
+
+
 def main() -> None:
     global _RECORDER, _ENGINE_FILTER, _TRIALS
     ap = argparse.ArgumentParser()
@@ -655,7 +702,7 @@ def main() -> None:
                table2_ensemble_batch, table3_weak_scaling,
                table4_strong_scaling, table5_packed_scaling,
                fig5_validation, kernel_block_sweep, resilience_ckpt,
-               roofline_summary]
+               serve_throughput, roofline_summary]
     only = [tok for tok in args.only.split(",") if tok]
     selected = [b for b in benches
                 if not only or any(tok in b.__name__ for tok in only)]

@@ -1,10 +1,16 @@
-"""Batched serving example: KV-cached greedy decode with slot recycling.
+"""RETIRED seed-era example -- see the sweep-farm service instead.
 
-Run:  PYTHONPATH=src python examples/serve_lm.py
+The LLM token-decode serving scaffold this example drove is gone
+(``repro.launch.serve`` is a deprecation stub).  The serving surface
+of this repo is the fault-tolerant sweep farm:
+
+    PYTHONPATH=src python -m repro serve results/farm
+    # then submit RunSpec JSON jobs with repro.serve.ServeClient
+
+See README "Sweep-farm service" and DESIGN.md S14.
 """
 import sys
 
 from repro.launch.serve import main
 
-sys.exit(main(["--arch", "internlm2-1.8b", "--smoke", "--requests", "6",
-               "--batch", "3", "--max-new", "8", "--max-len", "48"]))
+sys.exit(main())

@@ -288,6 +288,15 @@ def main(argv=None) -> int:
                           "(.json, Perfetto-loadable) or .jsonl stream "
                           "+ metrics snapshot here")
     run.set_defaults(fn=cmd_run)
+
+    from repro.serve.__main__ import add_serve_args, run_server
+    srv = sub.add_parser(
+        "serve", help="run the fault-tolerant sweep-farm server "
+                      "(exit 0 done / 3 drained-preempted)",
+        formatter_class=argparse.ArgumentDefaultsHelpFormatter)
+    add_serve_args(srv)
+    srv.set_defaults(fn=run_server)
+
     args = ap.parse_args(argv)
     return args.fn(args)
 

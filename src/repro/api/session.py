@@ -119,6 +119,20 @@ class _EnsembleRunner:
         self.spec = spec
         self.cfg = spec.sim_config()
         self.engine = make_engine(self.cfg)
+        self.step_count = step_count
+        self._jit_cache = {}
+        # jitted once per RUNNER, not per batch: jit caches on these fn
+        # objects, so rebind() re-initializes a new member set without
+        # retracing (the serve compiled-executable cache rides on this)
+        self._init_states = jax.jit(jax.vmap(self.engine.init_state))
+        self._magnetizations = jax.jit(jax.vmap(self.engine.magnetization))
+        self._full_lattices = jax.jit(jax.vmap(self.engine.full_lattice))
+        self._set_members(spec)
+        if state is None:
+            state = self._fresh_states()
+        self.states = state
+
+    def _set_members(self, spec: RunSpec) -> None:
         temps = spec.batch.member_temperatures
         seeds = spec.batch.member_seeds
         self.temperatures = np.asarray(temps, np.float32)
@@ -129,16 +143,39 @@ class _EnsembleRunner:
                                      jnp.float32)
         self.seeds = jnp.asarray(np.asarray(seeds, np.int64) & 0xFFFFFFFF,
                                  jnp.uint32)
-        self.step_count = step_count
-        self._jit_cache = {}
-        if state is None:
-            keys = jax.vmap(jax.random.PRNGKey)(
-                jnp.asarray(np.asarray(seeds), jnp.int32))
-            state = jax.jit(jax.vmap(self.engine.init_state))(keys)
-        self.states = state
-        # measurement wrappers jitted once (jit caches on the fn object)
-        self._magnetizations = jax.jit(jax.vmap(self.engine.magnetization))
-        self._full_lattices = jax.jit(jax.vmap(self.engine.full_lattice))
+        self._member_seeds = tuple(int(s) for s in seeds)
+
+    def _fresh_states(self):
+        keys = jax.vmap(jax.random.PRNGKey)(
+            jnp.asarray(np.asarray(self._member_seeds), jnp.int32))
+        return self._init_states(keys)
+
+    def rebind(self, spec: RunSpec) -> None:
+        """Re-point this runner at a NEW (temperature, seed) batch of
+        the SAME shape: same engine + params, same lattice, same batch
+        size.  Keeps the engine and every jit cache -- because
+        ``sweep_fn`` takes ``inv_temp``/``seed``/``start_offset`` as
+        traced arguments, the compiled executables are member-agnostic
+        and the rebound batch runs with zero recompilation.  This is
+        the serve scheduler's compiled-executable cache primitive."""
+        if spec.mode != "ensemble":
+            raise ValueError(
+                f"rebind needs an ensemble spec, got mode={spec.mode!r}")
+        old, new = self.spec, spec
+        same = (old.engine.to_dict() == new.engine.to_dict()
+                and old.lattice.to_dict() == new.lattice.to_dict()
+                and old.batch.size == new.batch.size)
+        if not same:
+            raise ValueError(
+                f"rebind shape mismatch: cached runner is "
+                f"{old.engine.name}/{old.lattice.n}x{old.lattice.m}/"
+                f"B{old.batch.size}, spec wants "
+                f"{new.engine.name}/{new.lattice.n}x{new.lattice.m}/"
+                f"B{new.batch.size}")
+        self.spec = spec
+        self._set_members(spec)
+        self.states = self._fresh_states()
+        self.step_count = 0
 
     @property
     def size(self) -> int:
@@ -501,15 +538,33 @@ class Session:
         return describe(self.spec)
 
     # -- fault tolerance ----------------------------------------------------
-    def state_digest(self) -> str:
+    def state_digest(self, member: Optional[int] = None) -> str:
         """CRC32C hex digest of (step_count, every named state array):
         two sessions with equal digests hold bit-identical lattices at
         the same point of the trajectory.  The bit-exact-resume tests
-        and the CI chaos job compare exactly this string."""
+        and the CI chaos job compare exactly this string.
+
+        ``member`` (ensemble mode only) digests ONE member's slice of
+        the batched state with the same framing a single-mode session
+        uses -- by the ensemble bit-exactness contract the result
+        equals the digest of the equivalent single run, which is how
+        the serve layer proves a coalesced job matches a direct one."""
         from repro.resilience import integrity
+        arrays = self._runner.state_arrays()
+        if member is not None:
+            if self.mode != "ensemble":
+                raise ValueError(
+                    f"member= digest needs ensemble mode, this session "
+                    f"is {self.mode!r}")
+            if not 0 <= member < self._runner.size:
+                raise ValueError(
+                    f"member {member} out of range for batch size "
+                    f"{self._runner.size}")
+            arrays = {k: np.asarray(v)[member]
+                      for k, v in arrays.items()}
         crc = integrity.crc32c(
             f"step_count={self._runner.step_count}".encode())
-        for k, v in sorted(self._runner.state_arrays().items()):
+        for k, v in sorted(arrays.items()):
             a = np.ascontiguousarray(np.asarray(v))
             crc = integrity.crc32c(
                 f"{k}:{a.dtype}:{a.shape}:".encode(), crc)

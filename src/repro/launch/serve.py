@@ -1,116 +1,30 @@
-"""Batched serving driver: continuous-batching-lite over serve_step.
+"""DEPRECATED seed-era scaffold -- use :mod:`repro.serve` instead.
 
-``python -m repro.launch.serve --arch internlm2-1.8b --smoke \
-      --requests 12 --batch 4 --max-new 16``
+This module used to drive continuous-batching token decoding for the
+LLM stack the repo was seeded from.  That workload has nothing to do
+with the Ising study; the serving surface of THIS repo is the
+fault-tolerant sweep farm:
 
-A fixed pool of B decode slots runs the jitted single-token serve_step;
-finished sequences (EOS or max-new) free their slot, and queued requests
-are admitted by resetting that slot's cache lane.  Per-slot state is a
-(length, remaining) pair; the KV cache is shared across slots as one
-batched pytree -- the standard TPU serving layout.  Prefill is one
-forward pass per admitted request (teacher-forced into the cache).
+    python -m repro serve DIR          # the server (DESIGN.md S14)
+    python -m repro.serve.smoke        # its crash drill
+
+The module is kept as an import-compatible stub for one release so
+stale ``from repro.launch.serve import main`` call sites fail with a
+pointer instead of an ImportError traceback.
 """
-import argparse
-import time
-from collections import deque
+from __future__ import annotations
 
-import jax
-import jax.numpy as jnp
-import numpy as np
+import sys
 
-from repro.configs import get_config, get_smoke_config
-from repro.models import decode_step, init_cache, init_model
-from repro.train import make_serve_step
-
-
-def _admit(cfg, params, cache, slot, prompt, step_fn):
-    """Prefill `prompt` (list[int]) into cache lane `slot` token-by-token.
-
-    Lane-wise admission keeps the example simple; a production stack would
-    run a batched prefill kernel (the prefill_32k dry-run cells cover that
-    path's lowering).
-    """
-    for t in prompt:
-        tok = jnp.zeros((cache_batch(cache), 1), jnp.int32)
-        tok = tok.at[slot, 0].set(t)
-        _, cache = step_fn(params, cache, tok)
-    return cache
-
-
-def cache_batch(cache):
-    for leaf in jax.tree.leaves(cache):
-        if hasattr(leaf, "ndim") and leaf.ndim >= 2:
-            return leaf.shape[1]
-    raise ValueError
+_MSG = ("repro.launch.serve is retired: it served LLM token decoding "
+        "from the repo's seed, not Ising sweeps.  Use the sweep-farm "
+        "service instead: `python -m repro serve DIR` "
+        "(repro.serve, DESIGN.md S14).")
 
 
 def main(argv=None) -> int:
-    ap = argparse.ArgumentParser()
-    ap.add_argument("--arch", default="internlm2-1.8b")
-    ap.add_argument("--smoke", action="store_true")
-    ap.add_argument("--requests", type=int, default=8)
-    ap.add_argument("--batch", type=int, default=4)
-    ap.add_argument("--max-new", type=int, default=16)
-    ap.add_argument("--max-len", type=int, default=64)
-    ap.add_argument("--seed", type=int, default=0)
-    args = ap.parse_args(argv)
-
-    cfg = get_smoke_config(args.arch) if args.smoke else get_config(
-        args.arch)
-    key = jax.random.PRNGKey(args.seed)
-    params = init_model(cfg, key)
-    serve = jax.jit(make_serve_step(cfg))
-    decode = jax.jit(lambda p, c, t: decode_step(cfg, p, c, t))
-
-    # request queue: random prompts of 3-6 tokens
-    queue = deque()
-    for r in range(args.requests):
-        k = jax.random.fold_in(key, r)
-        plen = int(jax.random.randint(k, (), 3, 7))
-        queue.append((r, list(np.asarray(
-            jax.random.randint(k, (plen,), 1, cfg.vocab)))))
-
-    b = args.batch
-    cache = init_cache(cfg, b, args.max_len)
-    cur_tok = jnp.zeros((b, 1), jnp.int32)
-    remaining = np.zeros(b, np.int32)           # 0 = free slot
-    req_of_slot = [-1] * b
-    outputs = {}
-    t0 = time.time()
-    steps = 0
-
-    while queue or remaining.any():
-        # admit into free slots (simplified: shared cache length means we
-        # restart the pool when all slots free; fine for equal-length demo)
-        for s in range(b):
-            if remaining[s] == 0 and queue:
-                rid, prompt = queue.popleft()
-                for t in prompt:               # lane prefill
-                    tok = cur_tok.at[s, 0].set(t)
-                    _, cache_new = decode(params, cache, tok)
-                    cache = cache_new
-                req_of_slot[s] = rid
-                remaining[s] = args.max_new
-                outputs[rid] = []
-        # one batched decode step for every active slot
-        nxt, cache = serve(params, cache, cur_tok)
-        steps += 1
-        nxt_np = np.asarray(nxt)
-        for s in range(b):
-            if remaining[s] > 0:
-                outputs[req_of_slot[s]].append(int(nxt_np[s, 0]))
-                remaining[s] -= 1
-        cur_tok = nxt
-        if int(cache["length"]) >= args.max_len - 1:
-            break
-
-    dt = time.time() - t0
-    done = sum(1 for v in outputs.values() if v)
-    print(f"served {done}/{args.requests} requests, {steps} batched steps,"
-          f" {steps * b / dt:.1f} tok/s (CPU)")
-    for rid in sorted(outputs)[:4]:
-        print(f"  req {rid}: {outputs[rid][:8]}...")
-    return 0
+    print(_MSG, file=sys.stderr)
+    return 2
 
 
 if __name__ == "__main__":

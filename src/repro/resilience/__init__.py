@@ -23,13 +23,14 @@ loading would cycle.
 from __future__ import annotations
 
 from . import degrade, faults, integrity
-from .errors import (ResilienceError, SimulatedResourceExhausted,
-                     SupervisorError, TransientDispatchError)
+from .errors import (FaultPlanError, ResilienceError,
+                     SimulatedResourceExhausted, SupervisorError,
+                     TransientDispatchError)
 
 __all__ = [
     "degrade", "faults", "integrity",
     "ResilienceError", "TransientDispatchError",
-    "SimulatedResourceExhausted", "SupervisorError",
+    "SimulatedResourceExhausted", "SupervisorError", "FaultPlanError",
     "Supervisor", "SupervisorResult",
 ]
 

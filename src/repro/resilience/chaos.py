@@ -23,6 +23,11 @@ Exit 0 iff the recovered digest matches.  The kill deliberately races
 a fast run: when the run completes before the signal lands (or the
 signal lands before the CLI installs its handler), the drill still
 corrupts + resumes -- the digest contract is the same either way.
+
+``--temps`` (comma list) runs the same four acts in vmapped-ensemble
+mode: the batch's checkpoints carry batched state arrays, and the
+resume must restore every member bit-exactly (the CI chaos job drills
+both paths).
 """
 from __future__ import annotations
 
@@ -38,13 +43,20 @@ import time
 
 
 def _cli(args, ckpt_dir: str) -> list:
-    return [sys.executable, "-m", "repro", "run",
-            "--n", str(args.n), "--engine", args.engine,
-            "--temperature", str(args.temperature),
-            "--seed", str(args.seed),
-            "--supervise", ckpt_dir, "--sweeps", str(args.sweeps),
-            "--ckpt-every-sweeps", str(args.every),
-            "--chunk", str(args.chunk), "--keep", "4"]
+    cmd = [sys.executable, "-m", "repro", "run",
+           "--n", str(args.n), "--engine", args.engine,
+           "--temperature", str(args.temperature),
+           "--seed", str(args.seed),
+           "--supervise", ckpt_dir, "--sweeps", str(args.sweeps),
+           "--ckpt-every-sweeps", str(args.every),
+           "--chunk", str(args.chunk), "--keep", "4"]
+    if args.temps:
+        # ensemble mode: the drill then covers the vmapped-batch
+        # supervised path (batched checkpoint arrays, batched resume)
+        cmd += ["--temps", args.temps]
+        if args.seeds:
+            cmd += ["--seeds", args.seeds]
+    return cmd
 
 
 def _digest(out: str) -> str:
@@ -67,6 +79,13 @@ def main(argv=None) -> int:
     ap.add_argument("--engine", default="multispin")
     ap.add_argument("--temperature", type=float, default=2.27)
     ap.add_argument("--seed", type=int, default=11)
+    ap.add_argument("--temps", default="",
+                    help="comma list of member temperatures: run the "
+                         "drill in vmapped-ensemble mode (the batched "
+                         "supervised path) instead of single-lattice")
+    ap.add_argument("--seeds", default="",
+                    help="comma list of ensemble member seeds "
+                         "(with --temps; default 0..B-1)")
     ap.add_argument("--sweeps", type=int, default=2048)
     ap.add_argument("--chunk", type=int, default=8)
     ap.add_argument("--every", type=int, default=64,

@@ -36,3 +36,16 @@ class SimulatedResourceExhausted(ResilienceError):
 class SupervisorError(ResilienceError):
     """A supervised run cannot proceed (no spec and no checkpoint, spec
     mismatch against the checkpoint being resumed, ...)."""
+
+
+class FaultPlanError(ResilienceError):
+    """A fault plan cannot be parsed (malformed JSON, not an object,
+    unknown fault kind, negative count).  Carries the offending text so
+    a bad ``REPRO_FAULTS`` value is diagnosable from the message alone
+    -- a chaos job that silently runs WITHOUT its injected faults would
+    pass vacuously."""
+
+    def __init__(self, detail: str, text: str = ""):
+        self.text = text
+        suffix = f" (offending text: {text!r})" if text else ""
+        super().__init__(f"bad fault plan: {detail}{suffix}")

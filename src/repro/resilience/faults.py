@@ -35,7 +35,8 @@ import os
 from contextlib import contextmanager
 from typing import Optional
 
-from .errors import SimulatedResourceExhausted, TransientDispatchError
+from .errors import (FaultPlanError, SimulatedResourceExhausted,
+                     TransientDispatchError)
 
 #: environment variable ``install_from_env`` reads a JSON plan from
 ENV_VAR = "REPRO_FAULTS"
@@ -77,15 +78,35 @@ class FaultPlan:
 
     @classmethod
     def from_json(cls, s: str) -> "FaultPlan":
-        d = json.loads(s)
+        """Parse a plan from JSON; every malformation -- syntax error,
+        non-object document, unknown fault kind, non-integer or
+        negative count -- raises a typed
+        :class:`~repro.resilience.errors.FaultPlanError` carrying the
+        offending text (the ``REPRO_FAULTS`` contract: a chaos job
+        must fail loudly, not run faultless)."""
+        try:
+            d = json.loads(s)
+        except json.JSONDecodeError as e:
+            raise FaultPlanError(f"malformed JSON: {e}", s) from e
         if not isinstance(d, dict):
-            raise ValueError(f"fault plan must be a JSON object, "
-                             f"got {type(d).__name__}")
+            raise FaultPlanError(
+                f"must be a JSON object, got {type(d).__name__}", s)
         unknown = sorted(set(d) - {"transient_dispatches",
                                    "resident_oom"})
         if unknown:
-            raise ValueError(f"fault plan: unknown key(s) {unknown}")
-        return cls(**{k: int(v) for k, v in d.items()})
+            raise FaultPlanError(
+                f"unknown fault kind(s) {unknown}; known: "
+                f"['resident_oom', 'transient_dispatches']", s)
+        counts = {}
+        for k, v in d.items():
+            if isinstance(v, bool) or not isinstance(v, int):
+                raise FaultPlanError(
+                    f"count {k}={v!r} must be an integer", s)
+            counts[k] = v
+        try:
+            return cls(**counts)
+        except ValueError as e:  # __post_init__: negative counts
+            raise FaultPlanError(str(e), s) from e
 
 
 _PLAN: Optional[FaultPlan] = None
@@ -129,6 +150,37 @@ def install_from_env(env_var: str = ENV_VAR) -> Optional[FaultPlan]:
 
 
 # ---------------------------------------------------------------------------
+# file corrupters: byte-level crash topologies on ANY file.  The
+# checkpoint corrupters below and the serve journal torn-write tests
+# (tests/test_serve.py) share these primitives.
+# ---------------------------------------------------------------------------
+
+def truncate_file(path: str, keep_bytes: int) -> str:
+    """Truncate ``path`` to ``keep_bytes`` -- a torn write: the tail of
+    the file never reached disk (power cut mid-append, lost page-cache
+    flush)."""
+    if keep_bytes < 0:
+        raise ValueError(f"keep_bytes must be >= 0, got {keep_bytes}")
+    with open(path, "r+b") as f:
+        f.truncate(keep_bytes)
+    return path
+
+
+def flip_byte_in_file(path: str, offset: int = 128) -> str:
+    """XOR one byte of ``path`` at ``offset`` (mod file size): silent
+    bit rot that only a content checksum catches."""
+    size = os.path.getsize(path)
+    if size == 0:
+        raise ValueError(f"{path}: empty file, nothing to flip")
+    with open(path, "r+b") as f:
+        f.seek(offset % size)
+        b = f.read(1)
+        f.seek(offset % size)
+        f.write(bytes([b[0] ^ 0xFF]))
+    return path
+
+
+# ---------------------------------------------------------------------------
 # checkpoint corrupters: the on-disk crash topologies
 # ---------------------------------------------------------------------------
 
@@ -156,10 +208,9 @@ def truncate_arrays(directory: str, step: int,
     """Truncate a COMMITTED step's ``arrays.npz`` to ``keep_bytes``,
     leaving the DONE marker valid -- a torn write the marker outlived
     (lost page-cache flush, partial copy)."""
-    path = os.path.join(_step_dir(directory, step), "arrays.npz")
-    with open(path, "r+b") as f:
-        f.truncate(keep_bytes)
-    return path
+    return truncate_file(
+        os.path.join(_step_dir(directory, step), "arrays.npz"),
+        keep_bytes)
 
 
 def stale_done(directory: str, step: int) -> str:
@@ -175,16 +226,8 @@ def flip_byte(directory: str, step: int, offset: int = 128,
               filename: str = "arrays.npz") -> str:
     """XOR one byte of a committed step's payload: silent bit rot the
     zip container may or may not notice, but the CRC32C manifest must."""
-    path = os.path.join(_step_dir(directory, step), filename)
-    size = os.path.getsize(path)
-    if size == 0:
-        raise ValueError(f"{path}: empty file, nothing to flip")
-    with open(path, "r+b") as f:
-        f.seek(offset % size)
-        b = f.read(1)
-        f.seek(offset % size)
-        f.write(bytes([b[0] ^ 0xFF]))
-    return path
+    return flip_byte_in_file(
+        os.path.join(_step_dir(directory, step), filename), offset)
 
 
 #: corrupter registry for the ``python -m repro.resilience corrupt`` CLI

@@ -79,7 +79,15 @@ class Supervisor:
                  chunk: int = DEFAULT_CHUNK, keep: int = 3,
                  install_signal_handlers: bool = True,
                  on_chunk: Optional[Callable[["Supervisor"], None]]
-                 = None):
+                 = None, session=None):
+        """``session`` (optional) is an already-open
+        :class:`~repro.api.session.Session` for ``spec`` used ONLY when
+        no valid checkpoint exists in ``directory`` -- the serve layer
+        passes a cache-rebound runner here so a warm batch skips both
+        device init and recompilation.  A resumable checkpoint always
+        wins (crash recovery must restore the persisted trajectory, not
+        a fresh injected state); the injected session must be at step 0
+        of the SAME spec."""
         if chunk <= 0:
             raise SupervisorError(f"chunk must be positive, got {chunk}")
         if every_sweeps < 0 or every_seconds < 0:
@@ -87,12 +95,26 @@ class Supervisor:
                 f"checkpoint cadence must be >= 0, got "
                 f"every_sweeps={every_sweeps} "
                 f"every_seconds={every_seconds}")
+        if session is not None:
+            if spec is None:
+                raise SupervisorError(
+                    "session= injection needs the matching spec too")
+            if session.spec.to_dict() != spec.to_dict():
+                raise SupervisorError(
+                    f"injected session's spec does not match the "
+                    f"supervised spec ({session.spec.to_dict()} != "
+                    f"{spec.to_dict()})")
+            if session.step_count != 0:
+                raise SupervisorError(
+                    f"injected session must be at step 0, is at "
+                    f"{session.step_count}")
         self.ckpt = Checkpointer(directory, keep=keep)
         self.chunk = chunk
         self.every_sweeps = every_sweeps
         self.every_seconds = every_seconds
         self.install_signal_handlers = install_signal_handlers
         self.on_chunk = on_chunk
+        self._injected = session
         self._stop = threading.Event()
         self._stop_signal: Optional[int] = None
         self.resumed_from: Optional[int] = None
@@ -103,6 +125,8 @@ class Supervisor:
         from repro.api.session import Session
         step = self.ckpt.latest_step()  # newest VALID step only
         if step is None:
+            if self._injected is not None:
+                return self._injected
             if spec is None:
                 raise SupervisorError(
                     f"no spec given and no valid checkpoint to resume "

@@ -13,9 +13,10 @@ from repro.api import (BatchSpec, EngineSpec, LatticeSpec, MeshSpec,
 from repro.api.session import Session
 from repro.ckpt import (Checkpointer, CheckpointError,
                         CheckpointIntegrityError)
-from repro.resilience import (SimulatedResourceExhausted, Supervisor,
-                              SupervisorError, TransientDispatchError,
-                              degrade, faults, integrity)
+from repro.resilience import (FaultPlanError, SimulatedResourceExhausted,
+                              Supervisor, SupervisorError,
+                              TransientDispatchError, degrade, faults,
+                              integrity)
 
 
 @pytest.fixture(autouse=True)
@@ -181,11 +182,29 @@ def test_fault_plan_from_env(monkeypatch):
     assert plan.transient_dispatches == 2
     assert faults.active_plan() is plan
     monkeypatch.setenv("REPRO_FAULTS", '{"bogus": 1}')
-    with pytest.raises(ValueError, match="unknown key"):
+    with pytest.raises(FaultPlanError, match="unknown fault kind"):
         faults.install_from_env()
     monkeypatch.delenv("REPRO_FAULTS")
     faults.clear()
     assert faults.install_from_env() is None
+
+
+@pytest.mark.parametrize("text,match", [
+    ('{"transient_dispatches": 2', "malformed JSON"),
+    ('[1, 2]', "must be a JSON object"),
+    ('{"bogus": 1}', "unknown fault kind"),
+    ('{"transient_dispatches": "two"}', "must be an integer"),
+    ('{"transient_dispatches": true}', "must be an integer"),
+    ('{"resident_oom": -1}', "must be >= 0"),
+])
+def test_fault_plan_failures_are_typed_and_diagnosable(text, match):
+    """Every malformation is a FaultPlanError CARRYING the offending
+    text -- a chaos job with a bad REPRO_FAULTS must fail loudly, not
+    run faultless and pass vacuously."""
+    with pytest.raises(FaultPlanError, match=match) as ei:
+        faults.FaultPlan.from_json(text)
+    assert ei.value.text == text
+    assert repr(text) in str(ei.value)
 
 
 # ---------------------------------------------------------------------------

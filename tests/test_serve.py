@@ -1,0 +1,421 @@
+"""Serve subsystem: durable journal, typed admission, coalescing, and
+the exactly-once sweep farm (DESIGN.md S14)."""
+import json
+import os
+import time
+
+import numpy as np
+import pytest
+
+import repro.telemetry as tel
+from repro.api import (BatchSpec, EngineSpec, LatticeSpec, RunSpec,
+                       SweepSpec)
+from repro.api.session import Session
+from repro.api.spec import MAX_BATCH_SEED
+from repro.resilience import TransientDispatchError, degrade, faults
+from repro.serve import (AdmissionError, DrainingError, Journal,
+                         JournalError, QueueFullError, SweepFarm)
+from repro.serve.journal import JOURNAL_NAME, job_table, replay
+from repro.serve.scheduler import (Job, coalesce_key, parse_envelope,
+                                   plan_batches)
+from repro.serve import server as serve_server
+
+
+@pytest.fixture(autouse=True)
+def _clean_resilience_state():
+    """Faults and demotions are process-global by design; tests must
+    not leak them into each other."""
+    faults.clear()
+    degrade.reset_demotions()
+    yield
+    faults.clear()
+    degrade.reset_demotions()
+
+
+@pytest.fixture
+def nosleep(monkeypatch):
+    """Retry without wall-clock backoff."""
+    monkeypatch.setattr(degrade, "DEFAULT_POLICY",
+                        degrade.RetryPolicy(sleep=lambda d: None))
+
+
+def _spec(engine="multispin", n=16, m=32, temperature=2.1, seed=7,
+          **kw):
+    return RunSpec(lattice=LatticeSpec(n, m),
+                   engine=EngineSpec(engine),
+                   temperature=temperature, seed=seed, **kw)
+
+
+def _job(jid, spec, sweeps=32, timeout_s=None):
+    return Job(id=jid, spec=spec, sweeps=sweeps, timeout_s=timeout_s,
+               submitted_t=0.0)
+
+
+def _direct_digest(spec, sweeps):
+    s = Session.open(spec)
+    s.run(sweeps)
+    return s.state_digest()
+
+
+# ---------------------------------------------------------------------------
+# journal: durability framing + torn-write recovery (the resilience
+# corrupters reproduce the crash topologies)
+# ---------------------------------------------------------------------------
+
+_RECORDS = [{"kind": "submit", "job": "j1", "x": 1},
+            {"kind": "start", "batch": "b1", "jobs": ["j1"]},
+            {"kind": "done", "job": "j1", "status": "completed"}]
+
+
+def _write_journal(path, records=_RECORDS):
+    with Journal(str(path)) as j:
+        for r in records:
+            j.append(r)
+    return str(path)
+
+
+def test_journal_roundtrip(tmp_path):
+    path = _write_journal(tmp_path / JOURNAL_NAME)
+    with Journal(path) as j:
+        assert j.records == _RECORDS
+        assert j.recovered_tail is None
+    assert list(replay(path)) == _RECORDS
+
+
+def test_journal_append_validation(tmp_path):
+    with Journal(str(tmp_path / JOURNAL_NAME)) as j:
+        with pytest.raises(JournalError, match="dicts with a 'kind'"):
+            j.append(["not", "a", "dict"])
+        with pytest.raises(JournalError, match="dicts with a 'kind'"):
+            j.append({"job": "j1"})
+
+
+def test_journal_torn_tail_recovers_to_last_whole_record(tmp_path):
+    path = _write_journal(tmp_path / JOURNAL_NAME)
+    size = os.path.getsize(path)
+    faults.truncate_file(path, size - 7)  # tear the final record
+    with Journal(path) as j:
+        assert j.records == _RECORDS[:2]
+        assert j.recovered_tail is not None
+        assert os.path.exists(j.recovered_tail)
+        # the torn bytes are quarantined, not destroyed
+        with open(j.recovered_tail, "rb") as f:
+            assert b"done" in f.read()
+        j.append(_RECORDS[2])  # appending after recovery is normal
+    with Journal(path) as j:
+        assert j.records == _RECORDS
+        assert j.recovered_tail is None
+
+
+def test_journal_bitrot_in_tail_is_quarantined(tmp_path):
+    path = _write_journal(tmp_path / JOURNAL_NAME)
+    size = os.path.getsize(path)
+    faults.flip_byte_in_file(path, offset=size - 5)
+    with Journal(path) as j:
+        assert j.records == _RECORDS[:2]
+        assert j.recovered_tail is not None
+
+
+def test_journal_midfile_corruption_raises(tmp_path):
+    path = _write_journal(tmp_path / JOURNAL_NAME)
+    # damage the FIRST record while valid ones follow: an append-only
+    # fsync'd writer cannot produce this, so replay must refuse to
+    # silently drop the acknowledged tail
+    faults.flip_byte_in_file(path, offset=12)
+    with pytest.raises(JournalError, match="AFTER damaged"):
+        Journal(path)
+
+
+def test_job_table_enforces_exactly_once():
+    sub = {"kind": "submit", "job": "j1"}
+    done = {"kind": "done", "job": "j1", "status": "completed"}
+    jobs, dones = job_table([sub, done])
+    assert list(jobs) == ["j1"] and dones["j1"] is done
+    with pytest.raises(JournalError, match="duplicate submit"):
+        job_table([sub, sub])
+    with pytest.raises(JournalError, match="unknown job"):
+        job_table([done])
+    with pytest.raises(JournalError, match="exactly-once"):
+        job_table([sub, done, done])
+
+
+# ---------------------------------------------------------------------------
+# admission: every malformation is a typed reject, never a crash
+# ---------------------------------------------------------------------------
+
+def test_parse_envelope_accepts_envelope_and_bare_spec():
+    spec = _spec()
+    got, sweeps, timeout = parse_envelope(
+        {"spec": spec.to_dict(), "sweeps": 64, "timeout_s": 5})
+    assert got.to_dict() == spec.to_dict()
+    assert sweeps == 64 and timeout == 5.0
+    bare = _spec(sweep=SweepSpec(thermalize=8, n_measure=4))
+    got, sweeps, timeout = parse_envelope(bare.to_dict())
+    assert sweeps == bare.sweep.total_sweeps and timeout is None
+
+
+@pytest.mark.parametrize("doc,match", [
+    ("not a dict", "must be a JSON object"),
+    ({"spec": {}, "swweeps": 3}, "unknown key"),
+    ({"spec": {"bogus": 1}, "sweeps": 3}, "bad RunSpec"),
+    ({"spec": _spec().to_dict()}, "no sweep target"),
+    ({"spec": _spec().to_dict(), "sweeps": 0}, "positive integer"),
+    ({"spec": _spec().to_dict(), "sweeps": True}, "positive integer"),
+    ({"spec": _spec().to_dict(), "sweeps": 4, "timeout_s": -1},
+     "positive number"),
+])
+def test_parse_envelope_rejects_typed(doc, match):
+    with pytest.raises(AdmissionError, match=match):
+        parse_envelope(doc)
+
+
+# ---------------------------------------------------------------------------
+# coalescing: deterministic grouping, bit-exactness preconditions
+# ---------------------------------------------------------------------------
+
+def test_coalesce_key_preconditions():
+    assert coalesce_key(_job("j1", _spec())) is not None
+    # key-based engines' digests depend on the chunk grid: never fuse
+    assert coalesce_key(_job("j2", _spec(engine="basic"))) is None
+    # the ensemble bit-exactness contract bounds member seeds
+    assert coalesce_key(
+        _job("j3", _spec(seed=MAX_BATCH_SEED))) is None
+    assert coalesce_key(_job("j4", _spec(
+        batch=BatchSpec(temperatures=(2.0, 2.2))))) is None
+    # the sweep target is part of the key: members must stop together
+    a = coalesce_key(_job("j5", _spec(), sweeps=32))
+    b = coalesce_key(_job("j6", _spec(), sweeps=64))
+    assert a is not None and b is not None and a != b
+
+
+def test_plan_batches_groups_chunks_and_orders():
+    co = [_job(f"j{i}", _spec(temperature=2.0 + 0.1 * i, seed=i))
+          for i in range(3)]
+    solo = _job("j9", _spec(engine="basic"))
+    batches = plan_batches([co[0], co[1], solo, co[2]], max_batch=2)
+    assert [[j.id for j in b.jobs] for b in batches] \
+        == [["j0", "j1"], ["j2"], ["j9"]]
+    assert [b.coalesced for b in batches] == [True, True, False]
+    fused = batches[0].spec()
+    assert fused.mode == "ensemble"
+    assert fused.batch.temperatures == (2.0, 2.1)
+    assert fused.batch.seeds == (0, 1)
+
+
+def test_plan_batches_is_deterministic():
+    jobs = [_job(f"j{i}", _spec(seed=i)) for i in range(4)]
+    a = plan_batches(jobs, max_batch=8)
+    b = plan_batches(list(jobs), max_batch=8)
+    assert [x.id for x in a] == [y.id for y in b]
+    # ids hash (key, member ids): a different grouping is a new batch
+    c = plan_batches(jobs[:3], max_batch=8)
+    assert c[0].id != a[0].id
+    with pytest.raises(ValueError, match="max_batch"):
+        plan_batches(jobs, max_batch=0)
+
+
+# ---------------------------------------------------------------------------
+# the farm: coalesced dispatch is digest-preserving and exactly-once
+# ---------------------------------------------------------------------------
+
+SWEEPS = 32
+
+
+def _farm(tmp_path, **kw):
+    kw.setdefault("chunk", SWEEPS)  # one compiled dispatch per batch
+    return SweepFarm(str(tmp_path / "farm"), **kw)
+
+
+def _submit(farm, spec, sweeps=SWEEPS, **extra):
+    return farm.submit({"spec": spec.to_dict(), "sweeps": sweeps,
+                        **extra})
+
+
+def test_farm_coalesces_and_preserves_digests(tmp_path):
+    specs = [_spec(temperature=2.0 + 0.1 * i, seed=20 + i)
+             for i in range(3)]
+    refs = [_direct_digest(s, SWEEPS) for s in specs]
+    farm = _farm(tmp_path)
+    jids = [_submit(farm, s) for s in specs]
+    before = tel.DISPATCHES.value
+    assert farm.run_until_idle() == 1  # one fused batch
+    assert tel.DISPATCHES.value - before == 1  # one compiled dispatch
+    for jid, want in zip(jids, refs):
+        job = farm.job(jid)
+        assert job["status"] == "completed"
+        assert job["digest"] == want
+        assert job["summary"]["coalesced"] == 3
+        # the result file is the queryable artifact
+        with open(os.path.join(farm.results_dir,
+                               f"{jid}.json")) as f:
+            assert json.load(f)["digest"] == want
+    assert farm.idle
+    farm.close()
+
+
+def test_farm_keeps_incompatible_jobs_apart(tmp_path):
+    farm = _farm(tmp_path)
+    _submit(farm, _spec(seed=1))
+    _submit(farm, _spec(engine="basic", seed=2))  # key-based: solo
+    assert farm.run_until_idle() == 2
+    assert all(j.terminal for j in farm.jobs.values())
+    farm.close()
+
+
+def test_farm_restart_is_exactly_once(tmp_path):
+    specs = [_spec(temperature=2.0 + 0.1 * i, seed=30 + i)
+             for i in range(2)]
+    farm = _farm(tmp_path)
+    jids = [_submit(farm, s) for s in specs]
+    farm.run_until_idle()
+    digests = [farm.job(j)["digest"] for j in jids]
+    farm.close()
+    # restart: replay must restore the terminal states and re-run
+    # NOTHING (dispatches delta 0)
+    before = tel.DISPATCHES.value
+    farm2 = _farm(tmp_path)
+    assert farm2.run_until_idle() == 0
+    assert tel.DISPATCHES.value - before == 0
+    assert [farm2.job(j)["digest"] for j in jids] == digests
+    # the only path to a terminal state refuses a second done record
+    with pytest.raises(JournalError, match="exactly-once"):
+        farm2._finish(farm2.jobs[jids[0]], "completed")
+    farm2.close()
+
+
+def test_farm_runner_pool_reuses_compiled_dispatch(tmp_path):
+    farm = _farm(tmp_path)
+    for i in range(2):
+        _submit(farm, _spec(temperature=2.0 + 0.1 * i, seed=40 + i))
+    farm.run_until_idle()
+    assert farm.status()["runner_pool"] == 1
+    # a second wave of the same dispatch shape rebinds the pooled
+    # runner: zero recompiles, one dispatch, digests still bit-exact
+    spec2 = [_spec(temperature=2.3 + 0.1 * i, seed=50 + i)
+             for i in range(2)]
+    hits = serve_server.CACHE_HITS.value
+    before = tel.DISPATCHES.value
+    jids = [_submit(farm, s) for s in spec2]
+    farm.run_until_idle()
+    assert serve_server.CACHE_HITS.value - hits == 1
+    assert tel.DISPATCHES.value - before == 1
+    for jid, s in zip(jids, spec2):
+        assert farm.job(jid)["digest"] == _direct_digest(s, SWEEPS)
+    farm.close()
+
+
+def test_farm_backpressure_and_drain_rejects(tmp_path):
+    farm = _farm(tmp_path, max_queue=1)
+    rejected = serve_server.REJECTED.value
+    with pytest.raises(AdmissionError):
+        farm.submit({"spec": {"bogus": 1}, "sweeps": 4})
+    _submit(farm, _spec())
+    with pytest.raises(QueueFullError, match="capacity"):
+        _submit(farm, _spec(seed=8))
+    farm.request_drain()
+    assert farm.status()["draining"]
+    with pytest.raises(DrainingError, match="draining"):
+        _submit(farm, _spec(seed=9))
+    assert serve_server.REJECTED.value - rejected == 3
+    farm.close()
+
+
+def test_farm_deadline_fails_queued_job_without_running_it(tmp_path):
+    farm = _farm(tmp_path)
+    jid = _submit(farm, _spec(), timeout_s=1e-6)
+    time.sleep(0.01)
+    before = tel.DISPATCHES.value
+    assert farm.run_until_idle() == 0  # expired before dispatch
+    assert tel.DISPATCHES.value - before == 0
+    job = farm.job(jid)
+    assert job["status"] == "failed"
+    assert "deadline exceeded" in job["error"]
+    farm.close()
+
+
+def test_farm_transient_fault_retries_bit_exact(tmp_path, nosleep):
+    want = _direct_digest(_spec(seed=61), SWEEPS)
+    farm = _farm(tmp_path)
+    retries = tel.REGISTRY.counter("resilience.retry").value
+    with faults.injected(faults.FaultPlan(transient_dispatches=1)):
+        jid = _submit(farm, _spec(seed=61))
+        farm.run_until_idle()
+    assert tel.REGISTRY.counter("resilience.retry").value > retries
+    job = farm.job(jid)
+    assert job["status"] == "completed" and job["digest"] == want
+    farm.close()
+
+
+def test_farm_job_failure_is_contained(tmp_path, nosleep):
+    farm = _farm(tmp_path)
+    # enough injected faults to exhaust the bounded retry budget: the
+    # job fails, the farm survives and keeps serving
+    with faults.injected(faults.FaultPlan(transient_dispatches=100)):
+        jid = _submit(farm, _spec(seed=62))
+        farm.run_until_idle()
+    job = farm.job(jid)
+    assert job["status"] == "failed"
+    assert TransientDispatchError.__name__ in job["error"]
+    jid2 = _submit(farm, _spec(seed=63))
+    farm.run_until_idle()
+    assert farm.job(jid2)["status"] == "completed"
+    farm.close()
+
+
+def test_farm_recovers_from_torn_journal(tmp_path):
+    farm = _farm(tmp_path)
+    jid = _submit(farm, _spec(seed=64))
+    farm.close()
+    path = os.path.join(farm.dir, JOURNAL_NAME)
+    size = os.path.getsize(path)
+    with open(path, "ab") as f:  # a submit append the crash tore
+        f.write(b"deadbeef {\"kind\": \"sub")
+    farm2 = _farm(tmp_path)
+    assert list(farm2.jobs) == [jid]  # the acked job survived
+    assert farm2.jobs[jid].status == "queued"
+    assert os.path.getsize(path) == size
+    farm2.run_until_idle()
+    assert farm2.job(jid)["status"] == "completed"
+    farm2.close()
+
+
+# ---------------------------------------------------------------------------
+# the session primitives the farm's bit-exactness rests on
+# ---------------------------------------------------------------------------
+
+def test_state_digest_member_matches_single_runs():
+    temps, seeds = (2.0, 2.4), (3, 5)
+    ens = Session.open(_spec(batch=BatchSpec(temperatures=temps,
+                                             seeds=seeds)))
+    ens.run(SWEEPS)
+    for i, (t, s) in enumerate(zip(temps, seeds)):
+        want = _direct_digest(_spec(temperature=t, seed=s), SWEEPS)
+        assert ens.state_digest(member=i) == want
+    with pytest.raises(ValueError, match="member"):
+        ens.state_digest(member=7)
+    single = Session.open(_spec())
+    with pytest.raises(ValueError, match="member"):
+        single.state_digest(member=0)
+
+
+def test_rebind_validates_shape_and_is_bit_exact():
+    ens = Session.open(_spec(batch=BatchSpec(temperatures=(2.0, 2.2),
+                                             seeds=(1, 2))))
+    runner = ens._runner
+    with pytest.raises(ValueError, match="ensemble"):
+        runner.rebind(_spec())
+    with pytest.raises(ValueError):  # batch size is part of the shape
+        runner.rebind(_spec(batch=BatchSpec(
+            temperatures=(2.0, 2.2, 2.4), seeds=(1, 2, 3))))
+    with pytest.raises(ValueError):  # so is the lattice
+        runner.rebind(_spec(n=32, m=32, batch=BatchSpec(
+            temperatures=(2.0, 2.2), seeds=(1, 2))))
+    # a shape-compatible rebind replays the new members bit-exactly
+    spec2 = _spec(batch=BatchSpec(temperatures=(2.1, 2.5),
+                                  seeds=(8, 9)))
+    runner.rebind(spec2)
+    rebound = Session(spec2, runner=runner)
+    rebound.run(SWEEPS)
+    fresh = Session.open(spec2)
+    fresh.run(SWEEPS)
+    assert rebound.state_digest() == fresh.state_digest()
