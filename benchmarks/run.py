@@ -273,6 +273,27 @@ def table5_packed_scaling(per_dev_rows=256, cols=1024, sweeps=5):
 
 
 # ---------------------------------------------------------------------------
+# Table 6 (S15 follow-up): weak scaling of the SHARDED RESIDENT tier --
+# per-shard VMEM k-sweep kernels with in-loop halo exchange
+# ---------------------------------------------------------------------------
+
+def table6_dist_weakscale(devices=(1, 2, 4, 8), sweeps=4):
+    """Weak scaling of the sharded resident tier: a (D, 1) mesh with
+    base_n * D lattice rows per point, so per-shard work is constant.
+    Rows carry the planner decision and the MEASURED halo traffic per
+    call (telemetry counter deltas); shared measurement code with the
+    standalone ``python -m repro.dist.weakscale`` CLI the CI dist job
+    runs."""
+    from repro.dist import weakscale as ws
+    for row in ws.measure_rows(devices, sweeps=sweeps,
+                               trials=_TRIALS or 2):
+        derived = ";".join(f"{k_}={v}"
+                           for k_, v in row["derived"].items())
+        _row(row["name"], row["us"], derived, engine=row["engine"],
+             k=row["k"], times=row["times_s"])
+
+
+# ---------------------------------------------------------------------------
 # Table 1 addendum: fused measure_scan vs legacy per-sample Python loop --
 # the dispatch-count win of the measurement subsystem (DESIGN.md S7)
 # ---------------------------------------------------------------------------
@@ -701,6 +722,7 @@ def main() -> None:
                table1_bitplane, table1_resident, table2_multispin_sizes,
                table2_ensemble_batch, table3_weak_scaling,
                table4_strong_scaling, table5_packed_scaling,
+               table6_dist_weakscale,
                fig5_validation, kernel_block_sweep, resilience_ckpt,
                serve_throughput, roofline_summary]
     only = [tok for tok in args.only.split(",") if tok]

@@ -40,6 +40,9 @@ from repro.resilience import degrade
 
 from .spec import RunSpec
 
+#: default for ``Session.restore(mesh=...)``: keep the checkpoint's mesh
+_KEEP = object()
+
 #: ``Engine.dist_factory`` flag -> ``repro.core.distributed`` factory name
 _DIST_FACTORIES = {
     "basic": "make_ising_step",
@@ -248,13 +251,28 @@ class _EnsembleRunner:
         self.states = self.engine.from_arrays(arrays)
 
 
-class _ShardedRunner:
-    """The ``repro.core.distributed`` step on a ``MeshSpec`` mesh.
+#: ``Engine.dist_factory`` flag -> (plane cells per row given lattice
+#: m, bytes per cell) -- the per-half-sweep tier's halo-traffic
+#: geometry (``halo_bytes`` accounting; the sharded resident tier
+#: carries its own in ``ShardPlan``)
+_DIST_CELLS = {
+    "basic": (lambda m: m // 2, 1),
+    "packed": (lambda m: m // 16, 4),
+    "bitplane": (lambda m: m // 2, 4),
+}
 
-    Randomness is global-position-keyed Philox, so the trajectory is
-    bit-identical to the single-device engine on ANY device grid
-    (tests/test_distributed.py); this runner only owns mesh
-    construction, sharding placement, and offset bookkeeping.
+
+class _ShardedRunner:
+    """A ``MeshSpec`` mesh run: the sharded resident tier
+    (``repro.dist``, DESIGN.md S15) when the shard planner fits the
+    engine's resident family, else the per-half-sweep
+    ``repro.core.distributed`` step named by ``dist_factory``.
+
+    Randomness is global-position-keyed Philox on BOTH tiers, so the
+    trajectory is bit-identical to the single-device engine on ANY
+    device grid (tests/test_distributed.py, tests/test_dist.py); this
+    runner only owns mesh construction, tier routing, sharding
+    placement, and offset/halo bookkeeping.
     """
 
     mode = "sharded"
@@ -274,10 +292,28 @@ class _ShardedRunner:
         self._factory = getattr(dist,
                                 _DIST_FACTORIES[self.engine.dist_factory])
         # the basic step takes its start offset in SWEEP units
-        # (half_sweep_offset(0, sweep0 + i, c)); packed/bitplane take
-        # half-sweep units (half_sweep_offset(sweep0, i, c))
+        # (half_sweep_offset(0, sweep0 + i, c)); packed/bitplane and
+        # the sharded resident tier take half-sweep units
+        # (half_sweep_offset(sweep0, i, c))
         self._offset_scale = 1 if self.engine.dist_factory == "basic" \
             else 2
+        # device grid under the default axis split (rows over all mesh
+        # axes but the last, columns over the last)
+        self._rows_devs = 1
+        for d in ms.shape[:-1]:
+            self._rows_devs *= d
+        self._cols_devs = ms.shape[-1]
+        self._dist_plan = None
+        self._dist_attrs = {}
+        if getattr(self.engine, "resident_family", None) is not None:
+            from repro import dist as rdist
+            fam = self.engine.resident_family
+            self._dist_plan = rdist.plan_shard_resident(
+                fam, self.cfg.n, self.cfg.m, self._rows_devs,
+                self._cols_devs)
+            self._dist_attrs = rdist.shard_decision_attrs(
+                fam, self.cfg.n, self.cfg.m, self._rows_devs,
+                self._cols_devs)
         self.step_count = step_count
         self._jit_cache = {}
         self._sharding = None  # set by the first step build
@@ -290,28 +326,71 @@ class _ShardedRunner:
     def _step(self, n_sweeps: int):
         got = self._jit_cache.get(n_sweeps)
         if got is None:
-            got = self._factory(self.mesh, n=self.cfg.n, m=self.cfg.m,
-                                seed=self.cfg.seed, n_sweeps=n_sweeps)
+            if self._dist_plan is not None:
+                from repro import dist as rdist
+                got = rdist.make_resident_step(
+                    self.mesh, self._dist_plan, seed=self.cfg.seed,
+                    n_sweeps=n_sweeps)
+            else:
+                got = self._factory(self.mesh, n=self.cfg.n,
+                                    m=self.cfg.m, seed=self.cfg.seed,
+                                    n_sweeps=n_sweeps)
             self._jit_cache[n_sweeps] = got
             self._sharding = got[1]
         return got
 
+    def _on_demote(self) -> None:
+        """Resident-tier demotion (``degrade.run_dispatch``): drop to
+        the per-half-sweep distributed step -- bit-exact by the shared
+        global-position Philox keying -- and refresh the span attrs so
+        traces show the fallback and its reason."""
+        self._jit_cache.clear()
+        if self._dist_plan is not None:
+            from repro import dist as rdist
+            self._dist_plan = None
+            self._dist_attrs = rdist.shard_decision_attrs(
+                self.engine.resident_family, self.cfg.n, self.cfg.m,
+                self._rows_devs, self._cols_devs)
+
+    def _record_halo(self, n_sweeps: int) -> int:
+        """Account this dispatch's halo traffic into the telemetry
+        counters; returns the exchange-event count (span attr + the
+        S15 one-exchange-per-k-sweeps assertion in tests)."""
+        if self._dist_plan is not None:
+            ex = self._dist_plan.exchanges(n_sweeps)
+            tel.record_halo_exchange(
+                ex, ex * self._dist_plan.halo_bytes_per_exchange)
+            return ex
+        # per-half-sweep tier: one exchange event per half-sweep, four
+        # 1-wide strips of the opposite-color plane per event
+        width_of, cell = _DIST_CELLS[self.engine.dist_factory]
+        n_loc = self.cfg.n // self._rows_devs
+        w_loc = width_of(self.cfg.m) // self._cols_devs
+        ex = 2 * n_sweeps
+        per_event = (2 * n_loc + 2 * w_loc) * cell \
+            * self._rows_devs * self._cols_devs
+        tel.record_halo_exchange(ex, ex * per_event)
+        return ex
+
     def run(self, n_sweeps: int):
         def attempt():
             fresh = n_sweeps not in self._jit_cache
+            scale = 2 if self._dist_plan is not None \
+                else self._offset_scale
             step, sh = self._step(n_sweeps)
             with self.engine._dispatch(
                     n_sweeps, compile="first" if fresh else "steady",
-                    mesh=list(self.spec.mesh.shape)) as sp:
+                    mesh=list(self.spec.mesh.shape),
+                    **self._dist_attrs) as sp:
                 state = step(*self.state,
                              jnp.float32(self.cfg.inv_temp),
-                             jnp.uint32(self._offset_scale *
-                                        self.step_count))
+                             jnp.uint32(scale * self.step_count))
+                sp.set(halo_exchanges=self._record_halo(n_sweeps))
                 sp.fence(state)
             return state
 
         self.state = degrade.run_dispatch(attempt, engine=self.engine,
-                                          on_demote=self._jit_cache.clear)
+                                          on_demote=self._on_demote)
         self.step_count += n_sweeps
         return None
 
@@ -375,6 +454,7 @@ def describe(spec: RunSpec) -> dict:
     """
     cls = ENGINES[spec.engine.name]
     resident = None
+    dist_plan = None
     with tel.span("spec.validate", mode=spec.mode,
                   engine=spec.engine.name,
                   lattice=(spec.lattice.n, spec.lattice.m)):
@@ -386,6 +466,17 @@ def describe(spec: RunSpec) -> dict:
             resident = decision_attrs(cls.resident_family,
                                       spec.lattice.n, spec.lattice.m)
             tel.instant("planner.decide", **resident)
+            if spec.mesh is not None:
+                # sharded runs use the SHARD planner (S15): same
+                # single-rendering contract as "resident" above
+                from repro.dist import shard_decision_attrs
+                rows_devs = 1
+                for d in spec.mesh.shape[:-1]:
+                    rows_devs *= d
+                dist_plan = shard_decision_attrs(
+                    cls.resident_family, spec.lattice.n,
+                    spec.lattice.m, rows_devs, spec.mesh.shape[-1])
+                tel.instant("planner.decide_shard", **dist_plan)
     out = {
         "mode": spec.mode,
         "engine": spec.engine.name,
@@ -394,6 +485,7 @@ def describe(spec: RunSpec) -> dict:
         "replicas": cls.replicas,
         "dist_factory": cls.dist_factory,
         "resident": resident,
+        "dist": dist_plan,
         "lattice": [spec.lattice.n, spec.lattice.m],
         "init_p_up": spec.lattice.init_p_up,
         "batch_size": 1 if spec.batch is None else spec.batch.size,
@@ -585,12 +677,23 @@ class Session:
                           **(extra or {}), **arrays)
 
     @classmethod
-    def restore(cls, path: str) -> "Session":
+    def restore(cls, path: str, mesh=_KEEP) -> "Session":
         """Rebuild a session from a checkpoint alone: the embedded spec
         reconstructs engine + runner, the arrays restore the state, and
-        counter-based engines continue the exact Philox stream."""
+        counter-based engines continue the exact Philox stream.
+
+        ``mesh`` overrides the checkpoint's ``MeshSpec`` (pass a
+        ``MeshSpec`` to reshard, ``None`` to continue single-device).
+        Legal because sharded trajectories are keyed on GLOBAL lattice
+        positions (DESIGN.md S15 stream invariance): the device grid
+        is an execution detail, not part of the trajectory's identity,
+        so a checkpoint saved on one mesh continues bit-exactly on any
+        other (tests/test_dist.py cross-mesh portability)."""
+        import dataclasses as _dc
         with tel.span("ckpt.restore", path=path) as sp:
             spec, step_count, arrays, _ = _load_checkpoint(path)
+            if mesh is not _KEEP and mesh != spec.mesh:
+                spec = _dc.replace(spec, mesh=mesh)
             sp.set(mode=spec.mode, engine=spec.engine.name,
                    step_count=step_count)
             return cls._from_arrays(spec, arrays, step_count)

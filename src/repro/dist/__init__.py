@@ -1,0 +1,44 @@
+"""``repro.dist`` -- the sharded resident tier (DESIGN.md S15).
+
+Fuses the two big execution wins that previously did not compose:
+
+* the **resident tier** (S9): one Pallas dispatch runs ``k`` full
+  sweeps with both compact color planes VMEM-resident;
+* the **distributed step** (S6): shard_map pencil decomposition with
+  ring-shift halo exchange over the mesh axes.
+
+The fusion is the *double-halo trick*: instead of exchanging 1-wide
+halos every half-sweep (``core.distributed``), each shard gathers a
+width ``h = 2k`` halo ring ONCE, then a per-shard VMEM-resident kernel
+runs ``k`` full sweeps updating the whole extended plane.  Wrong values
+creep inward from the extended edge at one ring per half-sweep, so
+after ``2k`` half-sweeps exactly the ``h`` halo rings are contaminated
+and the owned interior -- all the shard keeps -- is bit-exact.  Net:
+one exchange per ``k`` sweeps instead of ``2k`` exchanges.
+
+Philox draws are keyed on *global* lattice positions (precomputed
+index planes ride into the kernel), so the trajectory is bit-identical
+to the single-device resident tier on any mesh -- which also makes
+checkpoints portable across mesh shapes (tests/test_dist.py).
+
+Layout of the subsystem:
+
+* :mod:`repro.dist.planner` -- shard-aware fit/halo/k decisions
+  (:func:`plan_shard_resident`, :func:`shard_decision_attrs`);
+* :mod:`repro.dist.kernels` -- the per-shard Pallas k-sweep kernels
+  (global-index-keyed variants of the S9 resident kernels);
+* :mod:`repro.dist.driver`  -- the shard_map step factory
+  (:func:`make_resident_step`) with the in-loop halo gather;
+* :mod:`repro.dist.weakscale` -- the weak-scaling bench CLI
+  (``python -m repro.dist.weakscale``).
+"""
+from __future__ import annotations
+
+from .driver import make_resident_step
+from .planner import (ShardPlan, plan_shard_resident,
+                      shard_decision_attrs)
+
+__all__ = [
+    "ShardPlan", "plan_shard_resident", "shard_decision_attrs",
+    "make_resident_step",
+]

@@ -29,8 +29,14 @@ from repro.core import rng as crng
 _NIB = lat.NIBBLE_BITS
 
 
-def _half_sweep(target, op, is_black: bool, thr, k0, k1, offset):
-    """One packed color half-sweep on whole VMEM-resident word planes."""
+def _half_sweep(target, op, is_black: bool, thr, k0, k1, offset,
+                widx=None):
+    """One packed color half-sweep on whole VMEM-resident word planes.
+
+    ``widx`` overrides the Philox word keying with a precomputed uint32
+    global word-index plane (sharded resident tier, ``repro.dist``);
+    ``None`` keys on local iota -- correct when the planes ARE the full
+    lattice."""
     up = jnp.concatenate([op[-1:, :], op[:-1, :]], axis=0)
     down = jnp.concatenate([op[1:, :], op[:1, :]], axis=0)
     # side word: nibble funnel shift splicing the edge nibble of the
@@ -46,10 +52,11 @@ def _half_sweep(target, op, is_black: bool, thr, k0, k1, offset):
         side = jnp.where(parity == 1, minus, plus)
     nn_words = up + down + op + side          # 3 packed adds / 8 spins
 
-    w = op.shape[1]
-    rows = jax.lax.broadcasted_iota(jnp.int32, op.shape, 0)
-    cols = jax.lax.broadcasted_iota(jnp.int32, op.shape, 1)
-    widx = (rows * w + cols).astype(jnp.uint32)
+    if widx is None:
+        w = op.shape[1]
+        rows = jax.lax.broadcasted_iota(jnp.int32, op.shape, 0)
+        cols = jax.lax.broadcasted_iota(jnp.int32, op.shape, 1)
+        widx = (rows * w + cols).astype(jnp.uint32)
     zero = jnp.zeros_like(widx)
     lo = crng.philox4x32(np.uint32(2) * offset, zero, widx, zero, k0, k1)
     hi = crng.philox4x32(np.uint32(2) * offset + np.uint32(1), zero, widx,

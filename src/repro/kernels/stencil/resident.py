@@ -30,12 +30,18 @@ from jax.experimental.pallas import tpu as pltpu
 from repro.core import rng as crng
 
 
-def _half_sweep(target, op, inv_temp, is_black: bool, k0, k1, offset):
+def _half_sweep(target, op, inv_temp, is_black: bool, k0, k1, offset,
+                gidx=None):
     """One color half-sweep on whole VMEM-resident planes.
 
     Identical math (and float op order) to ``stencil.py``'s blocked
     kernel / ``core.metropolis.update_color_philox``: int8 neighbor
     sums, global (row, col) Philox keying, ``exp(-2 beta nn s)`` accept.
+
+    ``gidx`` overrides the Philox site keying with a precomputed uint32
+    global-index plane -- the sharded resident tier (``repro.dist``)
+    passes the TRUE global positions of its halo-extended shard, so the
+    draws match this kernel's own iota keying on the full lattice.
     """
     up = jnp.concatenate([op[-1:, :], op[:-1, :]], axis=0)
     down = jnp.concatenate([op[1:, :], op[:1, :]], axis=0)
@@ -48,10 +54,11 @@ def _half_sweep(target, op, inv_temp, is_black: bool, k0, k1, offset):
         side = jnp.where(parity == 1, minus, plus)
     nn = up + down + op + side  # int8 stays int8 (H1.5)
 
-    h = op.shape[1]
-    rows = jax.lax.broadcasted_iota(jnp.int32, op.shape, 0)
-    cols = jax.lax.broadcasted_iota(jnp.int32, op.shape, 1)
-    gidx = (rows * h + cols).astype(jnp.uint32)
+    if gidx is None:
+        h = op.shape[1]
+        rows = jax.lax.broadcasted_iota(jnp.int32, op.shape, 0)
+        cols = jax.lax.broadcasted_iota(jnp.int32, op.shape, 1)
+        gidx = (rows * h + cols).astype(jnp.uint32)
     zero = jnp.zeros_like(gidx)
     bits = crng.philox4x32(offset, zero, gidx, zero, k0, k1)[0]
     u = crng.u32_to_uniform(bits)

@@ -28,6 +28,15 @@ corrupts + resumes -- the digest contract is the same either way.
 mode: the batch's checkpoints carry batched state arrays, and the
 resume must restore every member bit-exactly (the CI chaos job drills
 both paths).
+
+``--mesh RxC`` runs acts 2-4 SHARDED while the reference stays
+single-device: the final digest equality then also proves the sharded
+tier's stream invariance (DESIGN.md S15).  ``--resume-mesh RxC``
+additionally resumes act 4 on a DIFFERENT device grid than the one the
+killed run checkpointed under -- the cross-mesh checkpoint-portability
+drill (the supervisor accepts a mesh-only spec difference).  The drill
+widens ``XLA_FLAGS`` host-device forcing itself when the requested
+meshes need more devices than the environment provides.
 """
 from __future__ import annotations
 
@@ -42,7 +51,7 @@ import sys
 import time
 
 
-def _cli(args, ckpt_dir: str) -> list:
+def _cli(args, ckpt_dir: str, mesh: str = "") -> list:
     cmd = [sys.executable, "-m", "repro", "run",
            "--n", str(args.n), "--engine", args.engine,
            "--temperature", str(args.temperature),
@@ -50,6 +59,8 @@ def _cli(args, ckpt_dir: str) -> list:
            "--supervise", ckpt_dir, "--sweeps", str(args.sweeps),
            "--ckpt-every-sweeps", str(args.every),
            "--chunk", str(args.chunk), "--keep", "4"]
+    if mesh:
+        cmd += ["--mesh", mesh]
     if args.temps:
         # ensemble mode: the drill then covers the vmapped-batch
         # supervised path (batched checkpoint arrays, batched resume)
@@ -86,6 +97,15 @@ def main(argv=None) -> int:
     ap.add_argument("--seeds", default="",
                     help="comma list of ensemble member seeds "
                          "(with --temps; default 0..B-1)")
+    ap.add_argument("--mesh", default="",
+                    help="device-mesh shape (e.g. 2x2): run the chaos "
+                         "acts SHARDED; the reference stays single-"
+                         "device, so the digest match also proves "
+                         "sharded stream invariance (DESIGN.md S15)")
+    ap.add_argument("--resume-mesh", default="",
+                    help="mesh shape for the act-4 resume only (with "
+                         "--mesh): the cross-mesh checkpoint-"
+                         "portability drill")
     ap.add_argument("--sweeps", type=int, default=2048)
     ap.add_argument("--chunk", type=int, default=8)
     ap.add_argument("--every", type=int, default=64,
@@ -96,6 +116,19 @@ def main(argv=None) -> int:
 
     env = dict(os.environ)
     env.pop("REPRO_FAULTS", None)  # the reference must run clean
+    need = 1
+    for m in (args.mesh, args.resume_mesh):
+        if m:
+            d = 1
+            for tok in m.split("x"):
+                d *= int(tok)
+            need = max(need, d)
+    if need > 1 and "xla_force_host_platform_device_count" \
+            not in env.get("XLA_FLAGS", ""):
+        # the subprocesses must see enough host devices for the mesh
+        env["XLA_FLAGS"] = (env.get("XLA_FLAGS", "") +
+                            f" --xla_force_host_platform_device_count="
+                            f"{need}").strip()
     ref_dir = os.path.join(args.workdir, "ref")
     chaos_dir = os.path.join(args.workdir, "chaos")
     for d in (ref_dir, chaos_dir):
@@ -113,7 +146,8 @@ def main(argv=None) -> int:
 
     print("# [2/4] chaos run: SIGTERM after the first committed step",
           flush=True)
-    proc = subprocess.Popen(_cli(args, chaos_dir), env=env, text=True,
+    proc = subprocess.Popen(_cli(args, chaos_dir, mesh=args.mesh),
+                            env=env, text=True,
                             stdout=subprocess.PIPE,
                             stderr=subprocess.STDOUT)
     deadline = time.monotonic() + args.timeout
@@ -147,7 +181,9 @@ def main(argv=None) -> int:
     print("# [4/4] resume under an injected transient dispatch fault",
           flush=True)
     env["REPRO_FAULTS"] = json.dumps({"transient_dispatches": 1})
-    res = subprocess.run(_cli(args, chaos_dir), env=env, text=True,
+    res = subprocess.run(_cli(args, chaos_dir,
+                              mesh=args.resume_mesh or args.mesh),
+                         env=env, text=True,
                          capture_output=True, timeout=args.timeout)
     print(res.stdout, end="", flush=True)
     if res.returncode != 0:

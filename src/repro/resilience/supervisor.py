@@ -120,6 +120,16 @@ class Supervisor:
         self.resumed_from: Optional[int] = None
         self.session = self._open(spec)
 
+    @staticmethod
+    def _spec_key(spec) -> dict:
+        """The spec fields that define the TRAJECTORY: everything but
+        the mesh.  Two specs equal under this key produce bit-identical
+        state streams (sharded runs are global-position-keyed), so a
+        supervised run may resume on a different device grid."""
+        d = spec.to_dict()
+        d.pop("mesh", None)
+        return d
+
     # -- resume -------------------------------------------------------------
     def _open(self, spec):
         from repro.api.session import Session
@@ -139,19 +149,27 @@ class Supervisor:
                 f"checkpoint step {step} in {self.ckpt.dir} has no "
                 f"spec.json sidecar; cannot verify it matches this run")
         stored = RunSpec.from_json(stored_json)
+        resume_spec = stored
         if spec is not None and stored.to_dict() != spec.to_dict():
-            raise SupervisorError(
-                f"checkpoint step {step} in {self.ckpt.dir} was written "
-                f"by a different spec; refusing to resume a different "
-                f"run (stored {stored.to_dict()} != requested "
-                f"{spec.to_dict()})")
+            if self._spec_key(stored) != self._spec_key(spec):
+                raise SupervisorError(
+                    f"checkpoint step {step} in {self.ckpt.dir} was "
+                    f"written by a different spec; refusing to resume "
+                    f"a different run (stored {stored.to_dict()} != "
+                    f"requested {spec.to_dict()})")
+            # mesh-only difference: the device grid is an execution
+            # detail, not part of the trajectory's identity (global-
+            # position Philox keying, DESIGN.md S15) -- resume the
+            # stored trajectory on the REQUESTED mesh (cross-mesh
+            # checkpoint portability, tests/test_dist.py)
+            resume_spec = spec
         # load_arrays re-validates and falls back if the step rotted
         # between discovery and here
         step, arrays = self.ckpt.load_arrays(step)
         RESUMES.inc()
         tel.instant("resilience.resume", step=step, dir=self.ckpt.dir)
         self.resumed_from = step
-        return Session._from_arrays(stored, arrays, step)
+        return Session._from_arrays(resume_spec, arrays, step)
 
     # -- preemption ---------------------------------------------------------
     def request_stop(self, signum: Optional[int] = None) -> None:

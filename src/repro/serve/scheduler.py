@@ -114,6 +114,17 @@ def parse_envelope(doc) -> Tuple[RunSpec, int, Optional[float]]:
                 f"timeout_s must be a positive number, got "
                 f"{timeout_s!r}")
         timeout_s = float(timeout_s)
+    if spec.mesh is not None:
+        # MeshSpec jobs are admitted as SOLO (never-coalesced) runs --
+        # coalesce_key already returns None for mode != "single" -- but
+        # only when this server's device pool can host the mesh; a
+        # too-big mesh is a typed rejection, not a mid-run crash
+        import jax
+        if spec.mesh.n_devices > jax.device_count():
+            raise AdmissionError(
+                f"mesh {list(spec.mesh.shape)} needs "
+                f"{spec.mesh.n_devices} devices; this server has "
+                f"{jax.device_count()}")
     return spec, int(sweeps), timeout_s
 
 

@@ -34,6 +34,13 @@ Counter semantics (asserted in tests/test_telemetry.py):
   sweeps x sites x batch (one draw per site per sweep; multispin packs
   8 sites per word but draws 8 offsets/word, bitplane shares one draw
   across its 32 replicas -- both land on exactly sites draws/sweep).
+* ``halo_exchanges`` -- halo exchange *events* on the sharded paths:
+  the per-half-sweep distributed tier performs 2 per sweep, the
+  sharded resident tier (DESIGN.md S15 double-halo) exactly one per k
+  sweeps -- the counter IS the assertion of that claim
+  (tests/test_dist.py).
+* ``halo_bytes``     -- bytes moved across the mesh by those
+  exchanges, summed over every shard.
 """
 from __future__ import annotations
 
@@ -49,8 +56,9 @@ __all__ = [
     "TelemetryError", "validate_snapshot", "validate_trace",
     "validate_event", "diff_counters",
     "DISPATCHES", "SWEEPS", "SPIN_FLIPS", "PHILOX_DRAWS",
+    "HALO_EXCHANGES", "HALO_BYTES",
     "enable", "disable", "enabled", "reset", "span", "instant",
-    "record_dispatch", "export",
+    "record_dispatch", "record_halo_exchange", "export",
 ]
 
 #: canonical counters -- module-held references survive REGISTRY.reset()
@@ -58,6 +66,8 @@ DISPATCHES = REGISTRY.counter("dispatches")
 SWEEPS = REGISTRY.counter("sweeps")
 SPIN_FLIPS = REGISTRY.counter("spin_flips")
 PHILOX_DRAWS = REGISTRY.counter("philox_draws")
+HALO_EXCHANGES = REGISTRY.counter("halo_exchanges")
+HALO_BYTES = REGISTRY.counter("halo_bytes")
 
 
 def enable() -> None:
@@ -105,6 +115,19 @@ def record_dispatch(*, n_sweeps: int, sites: int, replicas: int = 1,
         SPIN_FLIPS._value += draws * int(replicas) * int(batch)
         if counter_based:
             PHILOX_DRAWS._value += draws * int(batch)
+
+
+def record_halo_exchange(exchanges: int, bytes_moved: int) -> None:
+    """Account halo traffic of one sharded dispatch: ``exchanges``
+    exchange events moving ``bytes_moved`` bytes total (all shards,
+    both planes).  Host-side only, like :func:`record_dispatch` --
+    never call from traced code."""
+    if exchanges < 0 or bytes_moved < 0:
+        raise ValueError(
+            f"record_halo_exchange: {exchanges=}, {bytes_moved=}")
+    with REGISTRY._lock:
+        HALO_EXCHANGES._value += int(exchanges)
+        HALO_BYTES._value += int(bytes_moved)
 
 
 def export(path: str, meta: dict | None = None) -> str:

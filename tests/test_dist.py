@@ -1,0 +1,332 @@
+"""repro.dist -- sharded resident tier (DESIGN.md S15).
+
+Three layers:
+
+* planner unit tests (in-process, no devices): halo algebra, VMEM
+  fit, overlap cap, demotion reasons;
+* a 1x1-mesh session in the default single-device pytest process:
+  digest parity with the unsharded session, halo counter accounting
+  (resident: one exchange per k sweeps; demoted: two per sweep), and
+  the dispatch-span / describe attributes;
+* an 8-forced-host-device subprocess (the ``test_distributed.py``
+  convention): driver bit-exactness vs the single-device resident
+  kernels for all three families at k in {1, 3} on two mesh shapes,
+  Session digest parity on real multi-device meshes, and cross-mesh
+  supervised checkpoint portability.
+"""
+import json
+import math
+import os
+import subprocess
+import sys
+import textwrap
+
+import pytest
+
+import repro.telemetry as tel
+from repro.dist import plan_shard_resident, shard_decision_attrs
+from repro.dist.planner import K_CAP, ShardPlan, shard_working_set_bytes
+
+
+# ---------------------------------------------------------------------------
+# planner
+# ---------------------------------------------------------------------------
+
+def test_plan_picks_largest_feasible_k():
+    plan = plan_shard_resident("stencil", 64, 128, 2, 1)
+    assert plan is not None
+    assert plan.k == K_CAP and plan.halo == 2 * K_CAP
+    assert plan.n_loc == 32 and plan.w_loc == 64
+
+
+def test_plan_halo_always_even():
+    for k_cap in range(1, K_CAP + 1):
+        plan = plan_shard_resident("stencil", 64, 128, 2, 1,
+                                   k_cap=k_cap, max_overlap=100.0)
+        assert plan is not None and plan.k == k_cap
+        assert plan.halo == 2 * plan.k and plan.halo % 2 == 0
+
+
+def test_plan_rejects_non_divisible_grid():
+    # 64 rows do not tile 3 device rows; stencil width 64 not 5 cols
+    assert plan_shard_resident("stencil", 64, 128, 3, 1) is None
+    assert plan_shard_resident("stencil", 64, 128, 1, 5) is None
+    # odd per-shard rows break checkerboard parity uniformity
+    assert plan_shard_resident("stencil", 34, 128, 2, 1) is None
+
+
+def test_plan_overlap_cap_demotes_small_shards():
+    # 16-row shards of a 32x64 stencil plane: even k=1 (h=2) inflates
+    # the extended area past 2x owned -> demoted under the default cap
+    assert plan_shard_resident("stencil", 32, 64, 4, 4) is None
+    plan = plan_shard_resident("stencil", 32, 64, 4, 4,
+                               max_overlap=100.0)
+    assert plan is not None  # the cap is pure perf policy
+
+
+def test_plan_vmem_budget_demotes():
+    assert plan_shard_resident("stencil", 64, 128, 2, 1,
+                               budget_bytes=64) is None
+
+
+def test_plan_working_set_counts_index_planes():
+    # bitplane carries two uint32 index planes (group + lane); the
+    # extended working set must include them
+    ws = shard_working_set_bytes("bitplane", 8, 8, 2)
+    ext = (8 + 4) * (8 + 4)
+    assert ws >= ext * (4 + 4 * 2)  # >= 1x plane + both index planes
+
+
+def test_plan_exchanges_ceil_semantics():
+    plan = plan_shard_resident("stencil", 64, 128, 2, 1, k_cap=3,
+                               max_overlap=100.0)
+    assert plan.k == 3
+    assert plan.exchanges(6) == 2
+    assert plan.exchanges(7) == 3   # remainder block exchanges too
+    assert plan.exchanges(1) == 1
+
+
+def test_plan_halo_bytes_formula():
+    plan = plan_shard_resident("stencil", 64, 128, 2, 2, k_cap=1,
+                               max_overlap=100.0)
+    h, nl, wl = plan.halo, plan.n_loc, plan.w_loc
+    per_plane = 2 * nl * h + 2 * h * (wl + 2 * h)
+    assert plan.halo_bytes_per_exchange == 2 * per_plane * 1 * 4
+
+
+def test_decision_attrs_positive_and_demoted():
+    attrs = shard_decision_attrs("stencil", 64, 128, 2, 1)
+    assert attrs["sharded_resident"] is True
+    assert attrs["grid"] == "2x1"
+    assert attrs["halo_width"] == 2 * attrs["halo_k"]
+    attrs = shard_decision_attrs("stencil", 64, 128, 3, 1)
+    assert attrs["sharded_resident"] is False
+    assert "tile the device grid" in attrs["reason"]
+
+
+def test_unknown_family_raises():
+    with pytest.raises(ValueError, match="unknown resident family"):
+        plan_shard_resident("nope", 64, 64, 2, 1)
+
+
+# ---------------------------------------------------------------------------
+# 1x1-mesh sessions in the default single-device process
+# ---------------------------------------------------------------------------
+
+def _spec(engine, n, m, mesh_shape=None):
+    from repro.api import EngineSpec, LatticeSpec, MeshSpec, RunSpec
+    mesh = None if mesh_shape is None else MeshSpec(shape=mesh_shape)
+    return RunSpec(lattice=LatticeSpec(n=n, m=m),
+                   engine=EngineSpec(engine), temperature=2.27,
+                   seed=9, mesh=mesh)
+
+
+def test_1x1_mesh_resident_digest_matches_unsharded():
+    from repro.api.session import Session
+    ref = Session.open(_spec("stencil_pallas", 32, 32))
+    ref.run(5)
+    s = Session.open(_spec("stencil_pallas", 32, 32, (1, 1)))
+    plan = s._runner._dist_plan
+    assert plan is not None and plan.k >= 1
+    tel.reset()
+    s.run(5)
+    assert s.state_digest() == ref.state_digest()
+    ex = tel.HALO_EXCHANGES.value
+    assert ex == math.ceil(5 / plan.k)
+    assert tel.HALO_BYTES.value == ex * plan.halo_bytes_per_exchange
+
+
+def test_demoted_mesh_counts_per_half_sweep_exchanges():
+    from repro.api.session import Session
+    # multispin at m=32 packs to a 2-word row: the overlap cap demotes
+    # every k, so the per-half-sweep tier runs -> 2 exchanges per sweep
+    s = Session.open(_spec("multispin_pallas", 32, 32, (1, 1)))
+    assert s._runner._dist_plan is None
+    tel.reset()
+    s.run(3)
+    assert tel.HALO_EXCHANGES.value == 2 * 3
+    assert tel.HALO_BYTES.value > 0
+    ref = Session.open(_spec("multispin_pallas", 32, 32))
+    ref.run(3)
+    assert s.state_digest() == ref.state_digest()
+
+
+def test_dispatch_span_carries_halo_attrs():
+    from repro.api.session import Session
+    tel.reset()
+    tel.enable()
+    try:
+        s = Session.open(_spec("stencil_pallas", 32, 32, (1, 1)))
+        s.run(4)
+        spans = [e for e in tel.TRACER.events
+                 if e["name"] == "dispatch"]
+        assert spans, [e["name"] for e in tel.TRACER.events]
+        args = spans[-1]["args"]
+        assert args["sharded_resident"] is True
+        assert args["halo_width"] == 2 * args["halo_k"]
+        plan = s._runner._dist_plan
+        assert args["halo_exchanges"] == plan.exchanges(4)
+    finally:
+        tel.disable()
+        tel.reset()
+
+
+def test_describe_reports_shard_decision():
+    from repro.api.session import describe
+    d = describe(_spec("stencil_pallas", 32, 32, (1, 1)))
+    assert d["dist"]["sharded_resident"] is True
+    assert d["dist"]["halo_k"] >= 1
+    d = describe(_spec("multispin_pallas", 32, 32, (1, 1)))
+    assert d["dist"]["sharded_resident"] is False
+    assert "reason" in d["dist"]
+    d = describe(_spec("stencil_pallas", 32, 32))
+    assert d["dist"] is None
+
+
+# ---------------------------------------------------------------------------
+# 8-device subprocess: exactness, real meshes, cross-mesh portability
+# ---------------------------------------------------------------------------
+
+_SCRIPT = textwrap.dedent("""
+    import os
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    import math, tempfile
+    import jax, jax.numpy as jnp, numpy as np, json
+    import repro.telemetry as tel
+    from repro.launch.mesh import make_mesh
+    from repro.dist import plan_shard_resident, make_resident_step
+    from repro.kernels.stencil.resident import stencil_sweeps_resident
+    from repro.kernels.multispin.resident import multispin_sweeps_resident
+    from repro.kernels.bitplane.resident import bitplane_sweeps_resident
+    from repro.core import bitplane as bpc, lattice as lat, multispin as ms
+    from repro.api import EngineSpec, LatticeSpec, MeshSpec, RunSpec
+    from repro.api.session import Session
+    from repro.resilience import Supervisor
+
+    rng = np.random.default_rng(0)
+    SEED, BETA = 12345, 1.0 / 2.27
+    out = {}
+
+    def stencil_planes(n, m):
+        full = rng.integers(0, 2, (n, m)).astype(np.int8) * 2 - 1
+        return lat.split_checkerboard(jnp.asarray(full))
+
+    def ms_planes(n, m):
+        full = rng.integers(0, 2, (n, m)).astype(np.int8) * 2 - 1
+        return ms.pack_lattice(*lat.split_checkerboard(jnp.asarray(full)))
+
+    def bp_planes(n, m):
+        full = rng.integers(0, 2, (32, n, m)).astype(np.int8) * 2 - 1
+        return bpc.pack_lattices(jnp.asarray(full))
+
+    # -- driver bit-exactness: families x grids x k in {1, 3}, with a
+    #    remainder block (5 = 1*3 + 2) and a nonzero start offset
+    CASES = [("stencil", 48, 48, stencil_sweeps_resident, stencil_planes),
+             ("multispin", 48, 384, multispin_sweeps_resident, ms_planes),
+             ("bitplane", 48, 48, bitplane_sweeps_resident, bp_planes)]
+    for k in (1, 3):
+        ns = 5 if k == 3 else 2
+        for family, n, m, ref_fn, mk in CASES:
+            b, w = mk(n, m)
+            ref = ref_fn(b, w, jnp.float32(BETA), n_sweeps=ns,
+                         seed=SEED, start_offset=6, interpret=True)
+            ref = tuple(np.asarray(x) for x in ref)
+            for grid in [(4, 2), (2, 4)]:
+                mesh = make_mesh(grid, ("rows", "cols"))
+                plan = plan_shard_resident(family, n, m, grid[0],
+                                           grid[1], k_cap=k,
+                                           max_overlap=100.0)
+                assert plan is not None and plan.k == k, (family, grid, k)
+                step, sh = make_resident_step(mesh, plan, seed=SEED,
+                                              n_sweeps=ns)
+                ob, ow = step(jax.device_put(b, sh),
+                              jax.device_put(w, sh),
+                              jnp.float32(BETA), jnp.uint32(6))
+                key = f"exact_{family}_{grid[0]}x{grid[1]}_k{k}"
+                out[key] = bool(
+                    (np.asarray(ob) == ref[0]).all()
+                    and (np.asarray(ow) == ref[1]).all())
+
+    # -- Session digest parity + halo counters on real meshes
+    def spec_for(engine, n, m, shape=None):
+        mesh = None if shape is None else MeshSpec(shape=shape)
+        return RunSpec(lattice=LatticeSpec(n=n, m=m),
+                       engine=EngineSpec(engine), temperature=2.27,
+                       seed=9, mesh=mesh)
+
+    for engine, n, m in [("stencil_pallas", 48, 48),
+                         ("multispin_pallas", 48, 384),
+                         ("bitplane_pallas", 48, 48)]:
+        ref = Session.open(spec_for(engine, n, m))
+        ref.run(7)
+        want = ref.state_digest()
+        for shape in [(4, 2), (2, 4)]:
+            s = Session.open(spec_for(engine, n, m, shape))
+            plan = s._runner._dist_plan
+            assert plan is not None, (engine, shape)
+            tel.reset()
+            s.run(7)
+            key = f"session_{engine}_{shape[0]}x{shape[1]}"
+            out[key] = bool(s.state_digest() == want)
+            out[key + "_exchanges"] = (
+                tel.HALO_EXCHANGES.value == math.ceil(7 / plan.k))
+
+    # -- cross-mesh supervised checkpoint portability: save on 1x4,
+    #    resume on 4x2 AND unsharded; both must match the uninterrupted
+    #    single-device reference digest
+    ref = Session.open(spec_for("stencil_pallas", 48, 48))
+    ref.run(8)
+    want = ref.state_digest()
+    for resume_shape in [(4, 2), None]:
+        d = tempfile.mkdtemp(prefix="dist_xmesh_")
+        sup = Supervisor(spec_for("stencil_pallas", 48, 48, (1, 4)),
+                         d, every_sweeps=2, chunk=2,
+                         install_signal_handlers=False,
+                         on_chunk=lambda s: s.request_stop())
+        r1 = sup.run(8)
+        assert r1.status == "preempted", r1
+        sup2 = Supervisor(spec_for("stencil_pallas", 48, 48,
+                                   resume_shape), d, every_sweeps=2,
+                          chunk=2, install_signal_handlers=False)
+        r2 = sup2.run(8)
+        tag = "4x2" if resume_shape else "unsharded"
+        out[f"xmesh_resumed_{tag}"] = r2.resumed_from is not None
+        out[f"xmesh_digest_{tag}"] = bool(r2.completed
+                                          and r2.digest == want)
+
+    print(json.dumps(out))
+""")
+
+
+@pytest.fixture(scope="module")
+def dist_results():
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.join(os.path.dirname(__file__), "..",
+                                     "src")
+    env.pop("XLA_FLAGS", None)
+    proc = subprocess.run([sys.executable, "-c", _SCRIPT], env=env,
+                          capture_output=True, text=True, timeout=600)
+    assert proc.returncode == 0, proc.stderr[-3000:]
+    return json.loads(proc.stdout.strip().splitlines()[-1])
+
+
+@pytest.mark.parametrize("family", ["stencil", "multispin", "bitplane"])
+@pytest.mark.parametrize("grid", ["4x2", "2x4"])
+@pytest.mark.parametrize("k", [1, 3])
+def test_driver_bit_exact(dist_results, family, grid, k):
+    assert dist_results[f"exact_{family}_{grid}_k{k}"]
+
+
+@pytest.mark.parametrize("engine", ["stencil_pallas",
+                                    "multispin_pallas",
+                                    "bitplane_pallas"])
+@pytest.mark.parametrize("grid", ["4x2", "2x4"])
+def test_session_digest_parity(dist_results, engine, grid):
+    assert dist_results[f"session_{engine}_{grid}"]
+    assert dist_results[f"session_{engine}_{grid}_exchanges"]
+
+
+@pytest.mark.parametrize("tag", ["4x2", "unsharded"])
+def test_cross_mesh_checkpoint_portability(dist_results, tag):
+    assert dist_results[f"xmesh_resumed_{tag}"]
+    assert dist_results[f"xmesh_digest_{tag}"]

@@ -419,3 +419,35 @@ def test_rebind_validates_shape_and_is_bit_exact():
     fresh = Session.open(spec2)
     fresh.run(SWEEPS)
     assert rebound.state_digest() == fresh.state_digest()
+
+
+# ---------------------------------------------------------------------------
+# MeshSpec submissions: solo execution or typed rejection (never a crash)
+# ---------------------------------------------------------------------------
+
+def test_farm_mesh_job_runs_solo_bit_exact(tmp_path):
+    from repro.api import MeshSpec
+    spec = _spec(engine="stencil_pallas", n=32, m=32,
+                 mesh=MeshSpec(shape=(1, 1)))
+    want = _direct_digest(spec, SWEEPS)
+    farm = _farm(tmp_path)
+    jid = _submit(farm, spec)
+    _submit(farm, _spec(seed=40))      # a coalescible job alongside
+    assert coalesce_key(farm.jobs[jid]) is None  # mesh -> never fused
+    assert farm.run_until_idle() == 2  # two batches: mesh job ran solo
+    job = farm.job(jid)
+    assert job["status"] == "completed"
+    assert job["digest"] == want       # sharded digest == direct run
+    farm.close()
+
+
+def test_farm_rejects_oversized_mesh_typed(tmp_path):
+    from repro.api import MeshSpec
+    farm = _farm(tmp_path)
+    with pytest.raises(AdmissionError, match="devices"):
+        _submit(farm, _spec(mesh=MeshSpec(shape=(2, 4))))
+    # the typed rejection queued nothing and the farm still serves
+    ok = _submit(farm, _spec(seed=50))
+    assert farm.run_until_idle() == 1
+    assert farm.job(ok)["status"] == "completed"
+    farm.close()
